@@ -1,0 +1,39 @@
+"""Table 4 / Fig. 12 reproduction: area model decomposition + parameter
+scaling, validated against the paper's published anchor points."""
+
+from __future__ import annotations
+
+from repro.core import analytics as A
+from repro.core.analytics import PortConfig
+from repro.core.descriptor import Protocol
+
+
+def run(csv_rows):
+    # Table 4 decomposition at the PULP configuration
+    bd = A.area_model(A.pulp_cluster_ports(), aw=32, dw=32, nax=16)
+    for part, ge in bd.as_dict().items():
+        csv_rows.append((f"table4_pulp_{part}_GE", ge, ""))
+
+    # Fig. 12 scaling sweeps from the base configuration
+    for dw in (32, 64, 128, 256, 512):
+        csv_rows.append((f"fig12a_area_dw{dw}_GE",
+                         A.area_model(A.base_axi_ports(), dw=dw).total, ""))
+    for aw in (32, 48, 64):
+        csv_rows.append((f"fig12b_area_aw{aw}_GE",
+                         A.area_model(A.base_axi_ports(), aw=aw).total, ""))
+    for nax in (2, 4, 8, 16, 32, 64):
+        csv_rows.append((f"fig12c_area_nax{nax}_GE",
+                         A.area_model(A.base_axi_ports(), nax=nax).total,
+                         ""))
+
+    # paper anchors
+    csv_rows.append(("area_32b_32ot_GE",
+                     A.area_model(A.base_axi_ports(), nax=32).total,
+                     "paper=<25000"))
+    csv_rows.append(("area_GE_per_outstanding",
+                     A.ge_per_outstanding(A.base_axi_ports()),
+                     "paper=~400"))
+    csv_rows.append(("area_obi_minimal_GE",
+                     A.area_model([PortConfig(Protocol.OBI)], nax=1,
+                                  has_legalizer=False).total,
+                     "paper=>=2000 (IO-DMA class)"))

@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: wall time per call in interpret/XLA mode on
+CPU (sanity/regression numbers) + per-kernel VMEM/roofline derivation from
+the BlockSpec geometry (the TPU-side analytical numbers)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import plan_nd_copy
+from repro.launch.analysis import HBM_BW, PEAK_FLOPS
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                               # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(0)
+
+    # copy engine (XLA path wall time + TPU analytical)
+    from repro.kernels.copy_engine import copy_2d
+    x = jnp.asarray(rng.standard_normal((2048, 2048)), jnp.float32)
+    us = _time(lambda a: copy_2d(a, backend="xla"), x)
+    csv_rows.append(("copy2d_2048_xla_us", us, ""))
+    plan = plan_nd_copy((2048, 2048), 4)
+    tpu_us = 2 * 2048 * 2048 * 4 / HBM_BW * 1e6
+    csv_rows.append(("copy2d_2048_tpu_roofline_us", tpu_us,
+                     f"tile={plan.tile},buffers={plan.n_buffers},"
+                     f"vmem={plan.vmem_bytes}"))
+
+    # matmul
+    from repro.kernels.matmul_dma import matmul
+    a = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32)
+    us = _time(lambda p, q: matmul(p, q, backend="xla"), a, b)
+    csv_rows.append(("matmul_1024_xla_us", us, ""))
+    csv_rows.append(("matmul_1024_tpu_roofline_us",
+                     2 * 1024 ** 3 / PEAK_FLOPS * 1e6,
+                     "compute-bound on MXU"))
+
+    # flash attention (XLA chunked path)
+    from repro.models.attention import chunked_flash
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), jnp.bfloat16)
+    us = _time(lambda qq: chunked_flash(qq, qq, qq, True, 0, 0.0, 0.125,
+                                        256, 256), q)
+    csv_rows.append(("flash_1x8x1024x64_xla_us", us, ""))
+
+    # ssd
+    from repro.kernels.ssd import ssd
+    B, H, S, P, N = 1, 8, 512, 64, 64
+    xs = jnp.asarray(rng.standard_normal((B, H, S, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, H, S)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, H), jnp.float32)
+    D = jnp.asarray(rng.standard_normal(H), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, 1, S, N)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, 1, S, N)) * 0.3, jnp.float32)
+    us = _time(lambda *t: ssd(*t, chunk=128, backend="xla"),
+               xs, dt, A, D, Bm, Cm)
+    csv_rows.append(("ssd_1x8x512_xla_us", us, ""))
+
+    # decode attention
+    from repro.kernels.decode_attention import decode_attention
+    qd = jnp.asarray(rng.standard_normal((4, 8, 128)), jnp.bfloat16)
+    kd = jnp.asarray(rng.standard_normal((4, 2, 4096, 128)), jnp.bfloat16)
+    us = _time(lambda a, b: decode_attention(a, b, b, backend="xla"),
+               qd, kd)
+    csv_rows.append(("decode_attn_4x8_kv4096_xla_us", us, ""))
+    kv_bytes = 2 * 4 * 2 * 4096 * 128 * 2
+    csv_rows.append(("decode_attn_tpu_roofline_us",
+                     kv_bytes / HBM_BW * 1e6, "KV-stream bound"))

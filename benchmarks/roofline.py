@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json):
+per (arch × shape × mesh): the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS ratio, and collective cross-check against the
+iDMA ICI simulator (`dist.collectives`)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.dist.collectives import allreduce_seconds
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_artifacts():
+    arts = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            arts.append((os.path.basename(path), json.load(f)))
+    return arts
+
+
+def run(csv_rows):
+    arts = load_artifacts()
+    if not arts:
+        csv_rows.append(("roofline_artifacts_missing", 0,
+                         "run: python -m repro.launch.dryrun --all"))
+        return
+    for name, d in arts:
+        rl = d["roofline"]
+        tag = name.replace(".json", "")
+        mf = d.get("model_flops_global", 0.0) / max(d["n_devices"], 1)
+        ratio = mf / max(rl["flops_per_device"], 1.0)
+        csv_rows.append((f"roofline_{tag}_compute_s", rl["compute_s"], ""))
+        csv_rows.append((f"roofline_{tag}_memory_s", rl["memory_s"], ""))
+        csv_rows.append((f"roofline_{tag}_collective_s",
+                         rl["collective_s"], ""))
+        csv_rows.append((f"roofline_{tag}_bottleneck",
+                         {"compute": 0, "memory": 1,
+                          "collective": 2}[rl["bottleneck"]],
+                         rl["bottleneck"]))
+        csv_rows.append((f"roofline_{tag}_model_over_hlo_flops", ratio, ""))
+    # cross-check: one gradient all-reduce through the iDMA ICI model
+    csv_rows.append(("ici_allreduce_1GiB_256dev_s",
+                     allreduce_seconds(1 << 30, 256),
+                     "iDMA transport model over ICI"))

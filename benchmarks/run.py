@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV.  `python -m benchmarks.run [--only X]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import (area_model, bus_utilization, kernel_bench, latency,
+               outstanding_sweep, roofline, timing_model, workload_speedup)
+
+SUITES = [
+    ("bus_utilization", bus_utilization),     # Fig. 8 + §3.1
+    ("outstanding_sweep", outstanding_sweep),  # Fig. 14
+    ("area_model", area_model),               # Table 4 / Fig. 12
+    ("timing_model", timing_model),           # Fig. 13
+    ("latency", latency),                     # §4.3
+    ("workload_speedup", workload_speedup),   # §3.4 / §3.5 (Fig. 11)
+    ("kernel_bench", kernel_bench),           # kernels + TPU rooflines
+    ("roofline", roofline),                   # dry-run roofline table
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for name, mod in SUITES:
+        if args.only and args.only != name:
+            continue
+        print(f"# suite: {name}", file=sys.stderr)
+        mod.run(rows)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        if isinstance(value, float):
+            value = f"{value:.6g}"
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

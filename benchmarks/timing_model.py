@@ -1,0 +1,29 @@
+"""Fig. 13 reproduction: maximum clock frequency vs configuration."""
+
+from __future__ import annotations
+
+from repro.core import analytics as A
+from repro.core.analytics import PortConfig
+from repro.core.descriptor import Protocol
+
+CONFIGS = [
+    ("obi", [PortConfig(Protocol.OBI)]),
+    ("axi_lite", [PortConfig(Protocol.AXI_LITE)]),
+    ("axi", [PortConfig(Protocol.AXI4)]),
+    ("tilelink", [PortConfig(Protocol.TILELINK)]),
+    ("axi_obi", [PortConfig(Protocol.AXI4), PortConfig(Protocol.OBI)]),
+    ("all_protocols", [PortConfig(p) for p in
+                       (Protocol.AXI4, Protocol.AXI_LITE, Protocol.OBI,
+                        Protocol.TILELINK, Protocol.AXI_STREAM)]),
+]
+
+
+def run(csv_rows):
+    for name, ports in CONFIGS:
+        for dw in (32, 64, 128, 256, 512):
+            f = A.max_frequency_ghz(ports, dw=dw)
+            csv_rows.append((f"fig13_{name}_dw{dw}_GHz", f, ""))
+    csv_rows.append(("fig13_manticore_512b_GHz",
+                     A.max_frequency_ghz(A.base_axi_ports(), aw=48, dw=512,
+                                         nax=32),
+                     "paper=>1GHz @12nm"))

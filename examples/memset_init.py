@@ -1,0 +1,50 @@
+"""Memory initialization with the Init pseudo-protocol — the paper's
+lightweight data-initialization feature (Table 3) on both fabrics, plus a
+KV-cache page-pool zeroing demo.
+
+    PYTHONPATH=src python examples/memset_init.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (IDMAEngine, InitPattern, MemoryMap, Protocol,
+                        Transfer1D)
+from repro.core.descriptor import BackendOptions
+from repro.kernels.init_engine import iota_fill, memset, prng_fill
+from repro.serve.kvcache import PagePool, init_paged_kv, make_page_tables
+
+
+def main() -> None:
+    # RTL fabric: init an 8 KiB region three ways
+    mem = MemoryMap.create({Protocol.OBI: 1 << 16})
+    eng = IDMAEngine(mem=mem)
+    for pattern, value in [(InitPattern.CONSTANT, 0),
+                           (InitPattern.INCREMENTING, 5),
+                           (InitPattern.PSEUDORANDOM, 123)]:
+        opts = BackendOptions(init_pattern=pattern, init_value=value)
+        eng.submit(Transfer1D(0, 0, 8192, Protocol.INIT, Protocol.OBI,
+                              options=opts))
+        print(f"init {pattern.value:14s} first bytes:",
+              mem.spaces[Protocol.OBI][:8].tolist())
+
+    # TPU fabric: the same generators as Pallas kernels
+    z = memset((256, 512), 0.0, backend="pallas", interpret=True)
+    i = iota_fill((8, 128), 100, backend="pallas", interpret=True)
+    r = prng_fill((8, 128), 123, jnp.float32, backend="pallas",
+                  interpret=True)
+    print("kernel memset sum:", float(z.sum()),
+          "| iota[0,:4]:", np.asarray(i)[0, :4].tolist(),
+          "| prng mean:", round(float(r.mean()), 3), "(~0.5)")
+
+    # Framework use: zero-filled KV pages on allocation
+    pool_alloc = PagePool(n_pages=64, page_size=16)
+    pool = init_paged_kv(64, 16, n_kv_heads=2, dh=64)
+    tables = make_page_tables(pool_alloc, batch=2, seq_len=128)
+    print(f"KV pool: {pool['k'].shape} pages zero-initialized, "
+          f"{len(pool_alloc.free)} pages free after 2x128-token alloc")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Quickstart: the iDMA engine end-to-end in five minutes.
+
+1. Program a 3-D transfer through the register front-end and watch the
+   bytes move (functional back-end).
+2. Simulate the same transfer on the cycle-accurate transport model.
+3. Run the same descriptor plan as a Pallas copy kernel (interpret mode).
+4. Fill memory with the Init pseudo-protocol on both fabrics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (HBM, EngineConfig, IDMAEngine, InitPattern,
+                        MemoryMap, NdTransfer, Protocol, RegFrontend,
+                        TensorDim, Transfer1D, plan_nd_copy, simulate)
+from repro.core.descriptor import BackendOptions
+
+
+def main() -> None:
+    # -- 1. functional engine: a strided 3-D gather ------------------------
+    mem = MemoryMap.create({Protocol.AXI4: 1 << 16, Protocol.OBI: 1 << 16})
+    engine = IDMAEngine(mem=mem)
+    src = np.arange(4096, dtype=np.uint8)
+    mem.spaces[Protocol.AXI4][:4096] = src
+
+    fe = RegFrontend(engine, word_bits=32, ndims=3)
+    fe.configure(src=0, dst=0, length=64,
+                 dims=(TensorDim(src_stride=128, dst_stride=64, reps=8),),
+                 src_protocol=Protocol.AXI4, dst_protocol=Protocol.OBI)
+    tid = fe.launch()
+    got = mem.spaces[Protocol.OBI][:512]
+    want = np.concatenate([src[i * 128:i * 128 + 64] for i in range(8)])
+    assert np.array_equal(got, want)
+    print(f"[1] reg_32_3d transfer #{tid}: 8x64B strided gather OK "
+          f"({engine.stats.bursts} legalized bursts)")
+
+    # -- 2. cycle model: how long would this take? -------------------------
+    res = engine.simulate(NdTransfer(
+        0, 0, 64, (TensorDim(128, 64, 8),), Protocol.AXI4, Protocol.OBI))
+    print(f"[2] transport model: {res.cycles} cycles, "
+          f"first read request at cycle {res.first_read_req} "
+          f"(paper: 2), bus utilization {res.utilization:.2f}")
+
+    # -- 3. same plan on the TPU fabric (Pallas interpret mode) ------------
+    from repro.kernels.copy_engine import copy_2d
+    plan = plan_nd_copy((512, 1024), 4, n_buffers=2)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((512, 1024)),
+                    jnp.float32)
+    y = copy_2d(x, backend="pallas", interpret=True)
+    assert np.allclose(y, x)
+    print(f"[3] Pallas copy engine: tile {plan.tile}, grid {plan.grid}, "
+          f"VMEM {plan.vmem_bytes // 1024} KiB ({plan.n_buffers} buffers)")
+
+    # -- 4. Init pseudo-protocol on both fabrics ---------------------------
+    opts = BackendOptions(init_pattern=InitPattern.PSEUDORANDOM,
+                          init_value=42)
+    engine.submit(Transfer1D(0, 0, 512, Protocol.INIT, Protocol.OBI,
+                             options=opts))
+    from repro.kernels.init_engine import prng_fill
+    kernel_words = prng_fill((8, 16), 42, jnp.uint32, backend="pallas",
+                             interpret=True)
+    rtl_bytes = mem.spaces[Protocol.OBI][:512]
+    assert np.array_equal(
+        np.asarray(kernel_words).reshape(-1).view(np.uint8), rtl_bytes)
+    print("[4] Init PRNG: RTL byte stream == Pallas kernel stream (512 B)")
+
+    # -- bonus: deep-memory latency hiding (the paper's headline) ----------
+    cfg = EngineConfig(bus_width=4, n_outstanding=64)
+    ts = [Transfer1D(i * 16, i * 16, 16) for i in range(4096)]
+    r = simulate(ts, cfg, HBM, HBM)
+    print(f"[5] 16B transfers @ 100-cycle HBM latency: "
+          f"{r.utilization:.1%} bus utilization (paper: ~100%)")
+
+
+if __name__ == "__main__":
+    main()

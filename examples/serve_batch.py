@@ -1,0 +1,49 @@
+"""Batched serving example: prefill + ring-buffer decode with greedy
+sampling over a mixed batch of requests, on a reduced mixtral-family model.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.configs.base import RunConfig, reduced
+from repro.models import init_lm
+from repro.serve import Request, ServeEngine
+
+
+def main() -> None:
+    cfg = reduced(get("mixtral-8x7b"), n_layers=2, d_model=128, n_heads=4,
+                  n_kv_heads=2, d_ff=256, vocab=1024)
+    rcfg = RunConfig(kernels="xla", dtype="float32", remat=False)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, rcfg, params, max_len=128)
+
+    rng = np.random.default_rng(7)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 24)) for _ in range(4)]
+    reqs = [Request(prompt=p, max_new_tokens=12) for p in prompts]
+
+    t0 = time.time()
+    engine.generate(reqs)
+    dt = time.time() - t0
+    total = sum(len(r.output) for r in reqs)
+    print(json.dumps({
+        "arch": cfg.name,
+        "batch": len(reqs),
+        "generated_tokens": total,
+        "tok_per_s": round(total / dt, 1),
+        "outputs": [r.output[:6] for r in reqs],
+    }, indent=1))
+    # determinism check: greedy decode twice gives identical streams
+    reqs2 = [Request(prompt=p, max_new_tokens=12) for p in prompts]
+    engine.generate(reqs2)
+    assert all(a.output == b.output for a, b in zip(reqs, reqs2))
+    print("deterministic: OK")
+
+
+if __name__ == "__main__":
+    main()

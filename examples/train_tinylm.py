@@ -1,0 +1,62 @@
+"""End-to-end training driver: a reduced gemma2-family model trained for a
+few hundred steps on the deterministic synthetic pipeline, with
+checkpointing and an injected mid-run node failure that the trainer
+recovers from (error-handler 'replay' semantics).
+
+    PYTHONPATH=src python examples/train_tinylm.py [--steps 200]
+"""
+
+import argparse
+import json
+import tempfile
+import time
+
+from repro.configs import get
+from repro.configs.base import RunConfig, reduced
+from repro.dist.fault import FaultConfig, FaultInjector
+from repro.train import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="gemma2-2b")
+    args = ap.parse_args()
+
+    cfg = reduced(get(args.arch), n_layers=4, d_model=128, n_heads=4,
+                  n_kv_heads=2, d_ff=512, vocab=2048)
+    rcfg = RunConfig(kernels="xla", dtype="float32", remat=False,
+                     learning_rate=1e-3)
+    ckpt_dir = tempfile.mkdtemp(prefix="tinylm_ckpt_")
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         checkpoint_every=max(args.steps // 4, 10),
+                         checkpoint_dir=ckpt_dir,
+                         fault=FaultConfig(policy="replay"))
+    injector = FaultInjector(fail_steps=[args.steps // 2], kind="node")
+    trainer = Trainer(cfg, rcfg, tcfg, seq_len=128, global_batch=8,
+                      injector=injector)
+
+    t0 = time.time()
+    state = trainer.run()
+    dt = time.time() - t0
+    losses = [h["loss"] for h in trainer.history]
+    print(json.dumps({
+        "arch": cfg.name,
+        "steps": int(state["step"]),
+        "first_loss": round(losses[0], 4),
+        "last_loss": round(losses[-1], 4),
+        "node_failures_recovered": trainer.stats.node_failures,
+        "wall_s": round(dt, 1),
+        "steps_per_s": round(len(losses) / dt, 2),
+        "checkpoints": ckpt_dir,
+    }, indent=1))
+    assert trainer.stats.node_failures == 1, "fault injection did not fire"
+    assert int(state["step"]) == args.steps, "did not reach target step"
+    # uniform-random synthetic tokens sit at ln(vocab) from step 0; check
+    # the loop stayed at the optimum rather than diverging
+    import math
+    assert abs(losses[-1] - math.log(cfg.vocab_size)) < 0.5, losses[-1]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from artifacts."""
+
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        out[os.path.basename(p).replace(".json", "")] = json.load(open(p))
+    return out
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b/1e3:.0f}K"
+
+
+def table(arts, mesh_tag, out):
+    rows = []
+    for name, d in sorted(arts.items()):
+        if not name.endswith(mesh_tag):
+            continue
+        rl = d["roofline"]
+        mf = d.get("model_flops_global", 0) / max(d["n_devices"], 1)
+        ratio = mf / max(rl["flops_per_device"], 1)
+        step = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / step if step else 0
+        mem = d["memory"]
+        rows.append(
+            f"| {d['name']} | {rl['compute_s']:.4g} | {rl['memory_s']:.4g} "
+            f"| {rl['collective_s']:.4g} | {rl['bottleneck']} "
+            f"| {ratio:.2f} | {frac:.2f} "
+            f"| {fmt_bytes(mem.get('argument_bytes') or 0)} "
+            f"| {fmt_bytes(mem.get('temp_bytes') or 0)} "
+            f"| {d['compile_s']:.0f}s |")
+    print("| cell | compute_s | memory_s | collective_s | bound "
+          "| model/HLO | frac | args/dev | temp/dev | compile |", file=out)
+    print("|---|---|---|---|---|---|---|---|---|---|", file=out)
+    for r in rows:
+        print(r, file=out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    arts = load(d)
+    print(f"### single-pod (16x16 = 256 chips) — {d}")
+    table(arts, "_pod1", sys.stdout)
+    print(f"\n### multi-pod (2x16x16 = 512 chips) — {d}")
+    table(arts, "_pod2", sys.stdout)

@@ -1,0 +1,43 @@
+"""Assigned architecture configs (public literature values).
+
+`get(name)` returns the full ArchConfig; `REGISTRY` maps ids; `reduced`
+(from .base) shrinks any of them for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import (ALL_SHAPES, ArchConfig, EncoderConfig, MoEConfig,
+                   RunConfig, SSMConfig, ShapeSpec, VisionStub, reduced,
+                   TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+                   ATTN_FULL, ATTN_SWA, SSM, HYBRID)
+
+from .mamba2_1_3b import CONFIG as mamba2_1_3b
+from .qwen2_moe_a2_7b import CONFIG as qwen2_moe_a2_7b
+from .mixtral_8x7b import CONFIG as mixtral_8x7b
+from .internlm2_20b import CONFIG as internlm2_20b
+from .chatglm3_6b import CONFIG as chatglm3_6b
+from .gemma2_2b import CONFIG as gemma2_2b
+from .qwen2_5_32b import CONFIG as qwen2_5_32b
+from .seamless_m4t_large_v2 import CONFIG as seamless_m4t_large_v2
+from .internvl2_26b import CONFIG as internvl2_26b
+from .hymba_1_5b import CONFIG as hymba_1_5b
+
+REGISTRY: Dict[str, ArchConfig] = {
+    c.name: c for c in [
+        mamba2_1_3b, qwen2_moe_a2_7b, mixtral_8x7b, internlm2_20b,
+        chatglm3_6b, gemma2_2b, qwen2_5_32b, seamless_m4t_large_v2,
+        internvl2_26b, hymba_1_5b,
+    ]
+}
+
+
+def get(name: str) -> ArchConfig:
+    try:
+        cfg = REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}") \
+            from None
+    cfg.validate()
+    return cfg

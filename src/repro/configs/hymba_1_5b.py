@@ -1,0 +1,39 @@
+"""hymba-1.5b — Hymba hybrid-head architecture [arXiv:2411.13676].
+
+32 layers, d_model 1600, 25 attention heads (GQA kv=5, head_dim 64) in
+parallel with Mamba heads inside every layer (hybrid heads), d_ff 5504,
+vocab 32001, ssm_state 16.  Sliding window (1024) on all but three
+full-attention layers (first / middle / last, per the paper).  Meta tokens
+are omitted (noted in DESIGN.md).  Bounded attention state + SSM ⇒
+`long_500k` RUNS.
+"""
+
+from .base import (ArchConfig, ATTN_FULL, HYBRID, SSMConfig, TRAIN_4K,
+                   PREFILL_32K, DECODE_32K, LONG_500K)
+
+# layers 0, 15, 31 use full attention in their hybrid heads
+_PATTERN = (
+    (("hybrid_full",), 1),
+    (("hybrid",), 14),
+    (("hybrid_full",), 1),
+    (("hybrid",), 15),
+    (("hybrid_full",), 1),
+)
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    window=1024,
+    layer_pattern=_PATTERN,
+    ssm=SSMConfig(d_state=16, head_dim=64, n_groups=1, expand=2,
+                  conv_kernel=4, chunk=128),
+    shapes=(TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K),
+    source="[arXiv:2411.13676; hf]",
+)

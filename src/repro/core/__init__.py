@@ -1,0 +1,45 @@
+"""repro.core — the paper's contribution: a modular DMA engine architecture.
+
+Front-ends (control plane) → mid-ends (transfer acceleration) → back-ends
+(data plane), with standardized descriptor interfaces between them, a
+transfer legalizer, decoupled read/write transport, in-stream accelerators,
+the Init pseudo-protocol, an error handler, and area/timing/latency models.
+"""
+
+from .descriptor import (BackendOptions, InitPattern, MidendBundle,
+                         NdTransfer, Protocol, RtConfig, TensorDim,
+                         Transfer1D, contiguous_coverage, total_bytes)
+from .legalizer import (PAGE_SIZE, TPU_DMA_GRANULE, check_legal,
+                        legal_latency, legalize, legalize_tile)
+from .midend import (coalesce_nd, iter_tensor_nd, mp_dist, mp_dist_tree,
+                     mp_split, rt_schedule, split_and_distribute, tensor_2d,
+                     tensor_nd)
+from .frontend import (DescFrontend, InstFrontend, RegFrontend, write_chain)
+from .backend import (MemoryMap, TransferError, execute, init_stream,
+                      splitmix32, splitmix64)
+from .engine import (ErrorPolicy, IDMAEngine, TilePlan, plan_nd_copy)
+from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, EngineConfig,
+                        MemSystem, SimResult, cheshire_idma_config,
+                        fragmented_copy, manticore_idma_config,
+                        pulp_idma_config, simulate, utilization_sweep,
+                        xilinx_baseline_config)
+from . import analytics, instream
+
+__all__ = [
+    "BackendOptions", "InitPattern", "MidendBundle", "NdTransfer",
+    "Protocol", "RtConfig", "TensorDim", "Transfer1D",
+    "contiguous_coverage", "total_bytes",
+    "PAGE_SIZE", "TPU_DMA_GRANULE", "check_legal", "legal_latency",
+    "legalize", "legalize_tile",
+    "coalesce_nd", "iter_tensor_nd", "mp_dist", "mp_dist_tree", "mp_split",
+    "rt_schedule", "split_and_distribute", "tensor_2d", "tensor_nd",
+    "DescFrontend", "InstFrontend", "RegFrontend", "write_chain",
+    "MemoryMap", "TransferError", "execute", "init_stream", "splitmix32",
+    "splitmix64",
+    "ErrorPolicy", "IDMAEngine", "TilePlan", "plan_nd_copy",
+    "HBM", "PULP_L2", "RPC_DRAM", "SRAM", "EngineConfig", "MemSystem",
+    "SimResult", "cheshire_idma_config", "fragmented_copy",
+    "manticore_idma_config", "pulp_idma_config", "simulate",
+    "utilization_sweep", "xilinx_baseline_config",
+    "analytics", "instream",
+]

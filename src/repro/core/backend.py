@@ -1,0 +1,188 @@
+"""Back-end protocol managers and functional execution (paper §2.3).
+
+The RTL back-end moves real bytes; so do we.  `MemoryMap` hosts named
+address spaces (numpy byte buffers); `execute` runs a legalized burst list
+against it, byte-for-byte, including the Init pseudo-protocol's three
+pattern generators (constant / incrementing / pseudorandom).
+
+The pseudorandom stream is a splitmix32 counter generator over 32-bit
+words — deterministic, seedable, TPU-friendly (no 64-bit vector ops on the
+TPU VPU), and reproduced bit-exactly by the Pallas init_engine kernel
+(`repro.kernels.init_engine`), so RTL-level and kernel-level tests check
+against the same oracle.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .descriptor import (GENERATOR_PROTOCOLS, InitPattern, Protocol,
+                         Transfer1D)
+from .legalizer import check_legal
+
+
+def splitmix32(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix32 finalizer — the Init PRNG (uint32 in/out).
+
+    Any array module with wrapping uint32 semantics works: the Pallas
+    init_engine kernel calls this on jnp uint32 traces inside the kernel
+    body, the functional back-end on numpy uint32 arrays.
+    """
+    c1, c2, c3 = np.uint32(0x9E3779B9), np.uint32(0x85EBCA6B), np.uint32(0xC2B2AE35)
+    s16, s13 = np.uint32(16), np.uint32(13)
+    x = x + c1
+    z = x
+    z = (z ^ (z >> s16)) * c2
+    z = (z ^ (z >> s13)) * c3
+    z = z ^ (z >> s16)
+    return z
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer (kept for host-side tooling)."""
+    x = x.astype(np.uint64)
+    x = (x + np.uint64(0x9E3779B97F4A7C15))
+    z = x
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    return z
+
+
+def init_stream(pattern: InitPattern, value: int, offset: int,
+                length: int) -> np.ndarray:
+    """Bytes produced by the Init read manager for [offset, offset+length).
+
+    The stream is a pure function of (pattern, value, absolute offset) so
+    that split/legalized transfers produce identical bytes — the invariant
+    the property tests lean on.
+    """
+    if length == 0:
+        return np.zeros(0, dtype=np.uint8)
+    if pattern == InitPattern.CONSTANT:
+        return np.full(length, value & 0xFF, dtype=np.uint8)
+    if pattern == InitPattern.INCREMENTING:
+        idx = np.arange(offset, offset + length, dtype=np.uint64)
+        return ((idx + np.uint64(value)) & np.uint64(0xFF)).astype(np.uint8)
+    if pattern == InitPattern.PSEUDORANDOM:
+        first = offset // 4
+        last = (offset + length - 1) // 4
+        words = splitmix32(
+            (np.arange(first, last + 1, dtype=np.uint64) % (1 << 32))
+            .astype(np.uint32) + np.uint32(value & 0xFFFFFFFF))
+        stream = words.view(np.uint8)  # little-endian byte expansion
+        start = offset - first * 4
+        return stream[start:start + length].copy()
+    raise ValueError(f"unknown init pattern {pattern}")
+
+
+@dataclass
+class MemoryMap:
+    """Named address spaces backed by numpy byte buffers."""
+
+    spaces: Dict[Protocol, np.ndarray] = field(default_factory=dict)
+
+    @classmethod
+    def create(cls, sizes: Dict[Protocol, int]) -> "MemoryMap":
+        return cls({p: np.zeros(n, dtype=np.uint8) for p, n in sizes.items()})
+
+    def space(self, protocol: Protocol) -> np.ndarray:
+        if protocol in GENERATOR_PROTOCOLS:
+            raise ValueError("generator protocols have no backing store")
+        try:
+            return self.spaces[protocol]
+        except KeyError:
+            raise KeyError(f"no address space bound for {protocol}") from None
+
+    def read(self, protocol: Protocol, addr: int, length: int) -> np.ndarray:
+        buf = self.space(protocol)
+        if addr + length > buf.size:
+            raise IndexError(
+                f"read [{addr}, {addr + length}) beyond {protocol} size {buf.size}")
+        return buf[addr:addr + length]
+
+    def write(self, protocol: Protocol, addr: int, data: np.ndarray) -> None:
+        buf = self.space(protocol)
+        if addr + data.size > buf.size:
+            raise IndexError(
+                f"write [{addr}, {addr + data.size}) beyond {protocol} size {buf.size}")
+        buf[addr:addr + data.size] = data
+
+
+@dataclass
+class TransferError(Exception):
+    """A failing burst, reported with its legalized base address so the
+    front-end can decide continue/abort/replay (paper's error handler)."""
+
+    burst: Transfer1D
+    reason: str
+
+    def __str__(self) -> str:
+        return (f"transfer error at src={self.burst.src_addr:#x} "
+                f"dst={self.burst.dst_addr:#x} len={self.burst.length}: "
+                f"{self.reason}")
+
+
+class ReadManager:
+    """Protocol read manager: emit the byte stream of one burst."""
+
+    def __init__(self, mem: MemoryMap, instream=None) -> None:
+        self.mem = mem
+        self.instream = instream
+
+    def fetch(self, burst: Transfer1D, stream_offset: int) -> np.ndarray:
+        if burst.src_protocol in GENERATOR_PROTOCOLS:
+            data = init_stream(burst.options.init_pattern,
+                               burst.options.init_value,
+                               stream_offset, burst.length)
+        else:
+            data = self.mem.read(burst.src_protocol, burst.src_addr,
+                                 burst.length).copy()
+        return data
+
+
+class WriteManager:
+    """Protocol write manager: sink the (possibly transformed) byte stream."""
+
+    def __init__(self, mem: MemoryMap) -> None:
+        self.mem = mem
+
+    def commit(self, burst: Transfer1D, data: np.ndarray) -> None:
+        self.mem.write(burst.dst_protocol, burst.dst_addr, data)
+
+
+def execute(bursts: Sequence[Transfer1D], mem: MemoryMap,
+            instream=None, bus_width: int = 8,
+            fail_at: Optional[int] = None,
+            stream_base: Optional[Dict[int, int]] = None) -> int:
+    """Run legalized bursts functionally; returns bytes moved.
+
+    `instream` — optional in-stream accelerator applied between the read and
+    write managers (paper Fig. 5 '⚡' port).
+    `fail_at` — burst index to fault (error-handler tests).
+    `stream_base` — per-transfer-id base offset for generator streams, so a
+    legalized Init transfer produces the same stream as the unsplit one.
+    """
+    check_legal(bursts, bus_width=bus_width)
+    rm = ReadManager(mem)
+    wm = WriteManager(mem)
+    moved = 0
+    origin: Dict[int, int] = {}
+    for i, b in enumerate(bursts):
+        if fail_at is not None and i == fail_at:
+            raise TransferError(b, "injected fault")
+        base = origin.setdefault(
+            b.transfer_id,
+            b.src_addr if stream_base is None
+            else stream_base.get(b.transfer_id, b.src_addr))
+        data = rm.fetch(b, stream_offset=b.src_addr - base
+                        if b.src_protocol not in GENERATOR_PROTOCOLS
+                        else b.src_addr)
+        if instream is not None:
+            data = instream(data)
+        wm.commit(b, data)
+        moved += b.length
+    return moved

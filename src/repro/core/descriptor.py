@@ -1,0 +1,240 @@
+"""Transfer descriptors — the standardized interfaces between iDMA planes.
+
+The paper (Fig. 2) specifies the 1-D transfer descriptor exchanged between
+mid-end and back-end: source address, destination address, transfer length,
+protocol selection, and back-end options.  Mid-ends receive *bundles* of
+mid-end configuration plus a 1-D descriptor (or, for the tensor mid-ends, an
+N-D affine descriptor) and strip their own configuration while rewriting the
+transfer.
+
+This module defines those records as frozen dataclasses.  Everything that
+flows between `frontend` → `midend*` → `legalizer` → `backend` is one of
+these types, for both of this repo's fabrics:
+
+* the cycle-accurate RTL-equivalent simulator (`core.simulator`), and
+* the TPU execution paths (Pallas BlockSpec plans / XLA copy plans).
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Tuple
+
+
+class Protocol(enum.Enum):
+    """On-chip protocols of the paper's Table 3, plus the TPU address spaces
+    this repo adds as back-end targets (HBM/VMEM/ICI/HOST).
+
+    Each value carries (name, supports_bursts, burst_rule).
+    """
+
+    AXI4 = "axi4"            # 256 beats or 4 KiB, whichever first
+    AXI_LITE = "axi_lite"    # no bursts: single bus-sized beats
+    AXI_STREAM = "axi_stream"  # unlimited bursts (no addresses)
+    OBI = "obi"              # no bursts
+    TILELINK = "tilelink"    # TL-UH: power-of-two bursts
+    INIT = "init"            # pseudo-protocol: read-only pattern generator
+    # --- TPU fabric address spaces (this work's extension) ---
+    HBM = "hbm"              # device high-bandwidth memory
+    VMEM = "vmem"            # on-chip vector memory (Pallas tiles)
+    ICI = "ici"              # inter-chip interconnect (remote DMA)
+    HOST = "host"            # host DRAM over PCIe/DMA
+
+
+#: Protocols that carry no source address (generated streams).
+GENERATOR_PROTOCOLS = (Protocol.INIT,)
+
+#: Protocols that move data between devices rather than within one.
+REMOTE_PROTOCOLS = (Protocol.ICI,)
+
+
+class InitPattern(enum.Enum):
+    """Patterns of the Init pseudo-protocol read manager (Table 3)."""
+
+    CONSTANT = "constant"
+    INCREMENTING = "incrementing"
+    PSEUDORANDOM = "pseudorandom"
+
+
+@dataclass(frozen=True)
+class BackendOptions:
+    """Run-time back-end options carried by the 1-D descriptor.
+
+    `decouple_rw`   — fully decouple read/write (default in iDMA).
+    `max_burst`     — user burst-length cap in bytes (0 = protocol max).
+    `reduce_len`    — artificially reduce legalizer output length (debug).
+    `init_pattern`  — pattern when src protocol is INIT.
+    `init_value`    — seed/constant for the Init read manager.
+    """
+
+    decouple_rw: bool = True
+    max_burst: int = 0
+    reduce_len: int = 0
+    init_pattern: InitPattern = InitPattern.CONSTANT
+    init_value: int = 0
+
+
+@dataclass(frozen=True)
+class Transfer1D:
+    """The paper's Fig. 2 record: one in-order 1-D arbitrary-length transfer."""
+
+    src_addr: int
+    dst_addr: int
+    length: int                      # bytes
+    src_protocol: Protocol = Protocol.AXI4
+    dst_protocol: Protocol = Protocol.AXI4
+    options: BackendOptions = field(default_factory=BackendOptions)
+    # Bookkeeping (not part of the RTL record; used by mp_dist / tests).
+    transfer_id: int = 0
+
+    def __post_init__(self) -> None:
+        if self.length < 0:
+            raise ValueError(f"negative transfer length {self.length}")
+        if self.src_addr < 0 or self.dst_addr < 0:
+            raise ValueError("negative address")
+
+    @property
+    def src_end(self) -> int:
+        return self.src_addr + self.length
+
+    @property
+    def dst_end(self) -> int:
+        return self.dst_addr + self.length
+
+    def shifted(self, src_by: int, dst_by: int, length: Optional[int] = None
+                ) -> "Transfer1D":
+        return replace(
+            self,
+            src_addr=self.src_addr + src_by,
+            dst_addr=self.dst_addr + dst_by,
+            length=self.length if length is None else length,
+        )
+
+
+@dataclass(frozen=True)
+class TensorDim:
+    """One dimension of an N-D affine transfer: (src_stride, dst_stride, reps).
+
+    Matches the register layout of the `reg_*_nd` front-ends: every tensor
+    dimension adds `src_stride`, `dst_stride`, `num_repetitions`.
+    """
+
+    src_stride: int
+    dst_stride: int
+    reps: int
+
+    def __post_init__(self) -> None:
+        if self.reps <= 0:
+            raise ValueError(f"dimension repetitions must be positive, got {self.reps}")
+
+
+@dataclass(frozen=True)
+class NdTransfer:
+    """N-D affine transfer: an innermost contiguous 1-D burst of
+    `inner_length` bytes, repeated along `dims` (outermost last).
+
+    Total bytes moved = inner_length * prod(d.reps for d in dims).
+    """
+
+    src_addr: int
+    dst_addr: int
+    inner_length: int
+    dims: Tuple[TensorDim, ...] = ()
+    src_protocol: Protocol = Protocol.AXI4
+    dst_protocol: Protocol = Protocol.AXI4
+    options: BackendOptions = field(default_factory=BackendOptions)
+    transfer_id: int = 0
+
+    @property
+    def ndim(self) -> int:
+        return 1 + len(self.dims)
+
+    @property
+    def total_length(self) -> int:
+        n = self.inner_length
+        for d in self.dims:
+            n *= d.reps
+        return n
+
+    @property
+    def num_inner(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d.reps
+        return n
+
+    def as_1d(self) -> Transfer1D:
+        """Collapse to a single 1-D transfer; only legal when dense."""
+        if not self.is_dense():
+            raise ValueError("NdTransfer is not dense; use midend.tensor_nd")
+        return Transfer1D(
+            src_addr=self.src_addr,
+            dst_addr=self.dst_addr,
+            length=self.total_length,
+            src_protocol=self.src_protocol,
+            dst_protocol=self.dst_protocol,
+            options=self.options,
+            transfer_id=self.transfer_id,
+        )
+
+    def is_dense(self) -> bool:
+        """True when the walk is contiguous in both src and dst, i.e. each
+        dimension's stride equals the extent of the dimensions below it."""
+        extent = self.inner_length
+        for d in self.dims:
+            if d.src_stride != extent or d.dst_stride != extent:
+                return False
+            extent *= d.reps
+        return True
+
+
+@dataclass(frozen=True)
+class RtConfig:
+    """Real-time mid-end (`rt_3D`) configuration: autonomously launch the
+    bundled transfer every `period` cycles, `num_launches` times
+    (0 = forever).  A bypass flag lets unrelated transfers share the
+    front-/back-end (paper §2.2)."""
+
+    period: int
+    num_launches: int = 0
+    bypass: bool = False
+
+    def __post_init__(self) -> None:
+        if self.period <= 0:
+            raise ValueError("rt period must be positive")
+
+
+@dataclass(frozen=True)
+class MidendBundle:
+    """What a mid-end consumes: its own config + the transfer to rewrite.
+
+    Each mid-end strips `configs[0]` and passes the rest downstream
+    (paper §2: 'A mid-end will strip its configuration information while
+    modifying the 1D transfer descriptor.')."""
+
+    transfer: object                     # Transfer1D | NdTransfer
+    configs: Tuple[object, ...] = ()
+
+    def strip(self) -> "MidendBundle":
+        return MidendBundle(transfer=self.transfer, configs=self.configs[1:])
+
+
+def total_bytes(transfers: Sequence[Transfer1D]) -> int:
+    return sum(t.length for t in transfers)
+
+
+def contiguous_coverage(transfers: Sequence[Transfer1D]) -> bool:
+    """Check a transfer list covers a contiguous src AND dst byte range with
+    no overlap and no gap — the invariant every mid-end/legalizer rewrite of
+    a dense transfer must preserve."""
+    if not transfers:
+        return True
+    by_src = sorted(transfers, key=lambda t: t.src_addr)
+    for prev, nxt in zip(by_src, by_src[1:]):
+        if prev.src_end != nxt.src_addr:
+            return False
+        # dst must follow the same order for a dense copy
+        if prev.dst_end != nxt.dst_addr:
+            return False
+    return True

@@ -1,0 +1,247 @@
+"""IDMAEngine — compose front-end(s), mid-end chain, back-end(s) (Fig. 1).
+
+The engine owns:
+  * a mid-end chain (callables rewriting descriptor lists),
+  * one or more back-end ports (address-boundary-distributed, MemPool
+    style, when more than one),
+  * an error handler with the paper's three verbs: continue / abort /
+    replay (§2.3),
+  * both execution fabrics: the *functional* one (bytes move through
+    `core.backend`) and the *timing* one (`core.simulator`).
+
+It also exposes `plan_nd_copy`, the bridge used by the Pallas kernel layer:
+a `tensor_nd` plan legalized into TPU-tile terms (grid + block shapes),
+which `kernels/copy_engine` consumes to build its `BlockSpec`s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from . import simulator as sim
+from .backend import MemoryMap, TransferError, execute
+from .descriptor import NdTransfer, Protocol, Transfer1D
+from .legalizer import legalize, legalize_tile
+from .midend import mp_split, mp_dist, tensor_nd
+
+Descriptor = Union[Transfer1D, NdTransfer]
+
+
+@dataclass
+class ErrorPolicy:
+    """Paper §2.3 error handler: on a failing burst the engine pauses,
+    reports the legalized burst base address, and the PEs choose one of
+    continue / abort / replay."""
+
+    action: str = "replay"        # "continue" | "abort" | "replay"
+    max_replays: int = 3
+
+    def __post_init__(self) -> None:
+        if self.action not in ("continue", "abort", "replay"):
+            raise ValueError(f"unknown error action {self.action!r}")
+
+
+@dataclass
+class EngineStats:
+    submitted: int = 0
+    completed: int = 0
+    bytes_moved: int = 0
+    bursts: int = 0
+    errors: int = 0
+    replays: int = 0
+
+
+class IDMAEngine:
+    """A concrete iDMAE instance."""
+
+    def __init__(
+        self,
+        mem: Optional[MemoryMap] = None,
+        midends: Sequence[Callable[[List[Transfer1D]], List[Transfer1D]]] = (),
+        num_backends: int = 1,
+        backend_boundary: int = 0,
+        bus_width: int = 8,
+        error_policy: Optional[ErrorPolicy] = None,
+        sim_config: Optional[sim.EngineConfig] = None,
+        src_system: sim.MemSystem = sim.SRAM,
+        dst_system: sim.MemSystem = sim.SRAM,
+    ) -> None:
+        if num_backends > 1 and backend_boundary <= 0:
+            raise ValueError("multi-back-end engines need backend_boundary")
+        self.mem = mem
+        self.midends = list(midends)
+        self.num_backends = num_backends
+        self.backend_boundary = backend_boundary
+        self.bus_width = bus_width
+        self.error_policy = error_policy or ErrorPolicy()
+        self.sim_config = sim_config or sim.EngineConfig(
+            bus_width=bus_width, num_midends=len(self.midends))
+        self.src_system = src_system
+        self.dst_system = dst_system
+        self.stats = EngineStats()
+        self._next_id = 1
+        self._last_completed = 0
+        self._fail_at: Optional[int] = None  # fault injection for tests
+
+    # -- front-end interface ------------------------------------------------
+
+    def submit(self, transfer: Descriptor) -> int:
+        tid = self._next_id
+        self._next_id += 1
+        if isinstance(transfer, NdTransfer):
+            transfer = dataclasses.replace(transfer, transfer_id=tid)
+        else:
+            transfer = dataclasses.replace(transfer, transfer_id=tid)
+        self.stats.submitted += 1
+        self._run(transfer)
+        self._last_completed = tid
+        self.stats.completed += 1
+        return tid
+
+    def last_completed_id(self) -> int:
+        return self._last_completed
+
+    def inject_fault(self, burst_index: Optional[int]) -> None:
+        self._fail_at = burst_index
+
+    # -- pipeline ------------------------------------------------------------
+
+    def lower(self, transfer: Descriptor) -> List[List[Transfer1D]]:
+        """Descriptor → per-back-end legalized burst lists (no execution)."""
+        if isinstance(transfer, NdTransfer):
+            ones = tensor_nd(transfer)
+        else:
+            ones = [transfer]
+        for me in self.midends:
+            ones = me(ones)
+        if self.num_backends > 1:
+            split: List[Transfer1D] = []
+            for t in ones:
+                split.extend(mp_split(t, self.backend_boundary, which="dst"))
+            ports = mp_dist(split, self.num_backends, scheme="address",
+                            boundary=self.backend_boundary, which="dst")
+        else:
+            ports = [ones]
+        return [
+            [b for t in port for b in legalize(t, bus_width=self.bus_width)]
+            for port in ports
+        ]
+
+    def _run(self, transfer: Descriptor) -> None:
+        if self.mem is None:
+            return
+        ports = self.lower(transfer)
+        for bursts in ports:
+            self.stats.bursts += len(bursts)
+            done = 0
+            replays = 0
+            while done < len(bursts):
+                try:
+                    fail = None
+                    if self._fail_at is not None and \
+                            done <= self._fail_at < len(bursts):
+                        fail = self._fail_at - done
+                    moved = execute(bursts[done:], self.mem,
+                                    bus_width=self.bus_width, fail_at=fail)
+                    self.stats.bytes_moved += moved
+                    done = len(bursts)
+                except TransferError as err:
+                    self.stats.errors += 1
+                    idx = bursts.index(err.burst, done)
+                    self.stats.bytes_moved += sum(
+                        b.length for b in bursts[done:idx])
+                    action = self.error_policy.action
+                    if action == "abort":
+                        raise
+                    if action == "continue":
+                        self._fail_at = None
+                        done = idx + 1          # skip the offending burst
+                        continue
+                    # replay
+                    replays += 1
+                    self.stats.replays += 1
+                    if replays > self.error_policy.max_replays:
+                        raise
+                    self._fail_at = None        # fault cleared on replay
+                    done = idx                  # re-issue the same burst
+
+    # -- timing fabric ---------------------------------------------------------
+
+    def simulate(self, transfer: Descriptor) -> sim.SimResult:
+        """Cycle model of this engine executing `transfer` (single port) or
+        the max over ports (multi-back-end: ports run in parallel)."""
+        ports = self.lower(transfer)
+        results = [
+            sim.simulate(bursts, self.sim_config, self.src_system,
+                         self.dst_system, already_legal=True)
+            for bursts in ports if bursts
+        ]
+        if not results:
+            return sim.SimResult(0, 0, 0, self.sim_config.launch_latency, 0)
+        total_bytes = sum(r.useful_bytes for r in results)
+        worst = max(results, key=lambda r: r.cycles)
+        merged = sim.SimResult(
+            cycles=worst.cycles,
+            useful_bytes=total_bytes,
+            bus_beats=sum(r.bus_beats for r in results),
+            first_read_req=min(r.first_read_req for r in results),
+            n_bursts=sum(r.n_bursts for r in results),
+        )
+        return merged.with_width(self.sim_config.bus_width)
+
+
+# --------------------------------------------------------------------------
+# Pallas bridge — descriptor plans for the TPU fabric
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TilePlan:
+    """A legalized 2-D tile walk for the TPU copy fabric.
+
+    grid      — number of tiles along each of the two dims,
+    tile      — VMEM tile shape (sublane/lane legal),
+    shape     — the full (rows, cols) array shape,
+    n_buffers — outstanding-transaction analogue (double/triple buffering).
+    """
+
+    shape: Tuple[int, int]
+    tile: Tuple[int, int]
+    grid: Tuple[int, int]
+    n_buffers: int
+    itemsize: int
+
+    @property
+    def vmem_bytes(self) -> int:
+        return self.tile[0] * self.tile[1] * self.itemsize * self.n_buffers
+
+
+def plan_nd_copy(shape: Tuple[int, int], itemsize: int,
+                 requested_tile: Optional[Tuple[int, int]] = None,
+                 n_buffers: int = 2,
+                 vmem_budget: int = 8 * 1024 * 1024) -> TilePlan:
+    """tensor_ND + legalizer for the TPU fabric: choose a legal VMEM tile
+    and grid covering `shape`.  The per-buffer budget already accounts for
+    multi-buffering (NAx ≡ n_buffers)."""
+    rows, cols = shape
+    want = requested_tile or (min(rows, 512), min(cols, 1024))
+    tile = legalize_tile(want, itemsize,
+                         vmem_budget=max(vmem_budget // max(n_buffers, 1), 1))
+    tr = min(tile[0], _ceil_mult(rows, _sub(itemsize)))
+    tc = min(tile[1], _ceil_mult(cols, 128))
+    tile = (tr, tc)
+    grid = (-(-rows // tile[0]), -(-cols // tile[1]))
+    return TilePlan(shape=shape, tile=tile, grid=grid,
+                    n_buffers=n_buffers, itemsize=itemsize)
+
+
+def _sub(itemsize: int) -> int:
+    from .legalizer import sublane_multiple
+    return sublane_multiple(itemsize)
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

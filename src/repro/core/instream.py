@@ -1,0 +1,175 @@
+"""In-stream accelerators (paper §2: 'an in-stream acceleration port enables
+configurable in-flight operation on the data being transferred').
+
+The RTL exposes a standardized byte-stream port inside the dataflow element
+(Fig. 5 '⚡').  Here each accelerator is a pure function over the stream,
+usable in three places:
+
+1. the functional back-end (`core.backend.execute(instream=...)`),
+2. Pallas kernels (fused into the copy epilogue, see kernels/copy_engine),
+3. distributed collectives (gradient (de)compression around `psum`,
+   see `dist.collectives` — the beyond-paper use).
+
+All transforms are JAX-traceable (jnp) with numpy fallbacks for the RTL-
+level byte tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no in-stream accelerator {name!r}; have {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------------
+# Element transforms
+# --------------------------------------------------------------------------
+
+@register("identity")
+def identity(x):
+    return x
+
+
+@register("cast")
+def cast(x, dtype=jnp.bfloat16):
+    return x.astype(dtype)
+
+
+@register("scale")
+def scale(x, factor=1.0):
+    return x * factor
+
+
+@register("zero")
+def zero(x):
+    return jnp.zeros_like(x) if isinstance(x, jax.Array) else np.zeros_like(x)
+
+
+@register("byteswap")
+def byteswap(x):
+    """Endianness swap — a classic DMA in-flight transform."""
+    if isinstance(x, np.ndarray) and x.dtype == np.uint8:
+        return x.reshape(-1, 2)[:, ::-1].reshape(-1)
+    raise TypeError("byteswap operates on uint8 byte streams")
+
+
+@register("block_transpose")
+def block_transpose(x, block: Tuple[int, int] = (8, 8)):
+    """MT-DMA-style in-flight block transposition (paper Table 5,
+    'Stream Modification Capability: Block Transp.'): each (r, r) block is
+    transposed in place (square blocks ⇒ involution)."""
+    r, c = block
+    if r != c:
+        raise ValueError("in-stream block transpose needs square blocks")
+    xp = jnp if isinstance(x, jax.Array) else np
+    if x.ndim != 2:
+        raise ValueError("block_transpose expects a 2-D tile stream")
+    R, C = x.shape
+    if R % r or C % c:
+        raise ValueError(f"tile {x.shape} not divisible by block {block}")
+    t = x.reshape(R // r, r, C // c, c)
+    return xp.transpose(t, (0, 3, 2, 1)).reshape(R, C)
+
+
+# --------------------------------------------------------------------------
+# Quantization / compression — the gradient-compression accelerators
+# --------------------------------------------------------------------------
+
+def quantize_int8(x: Array, axis: Optional[int] = None
+                  ) -> Tuple[Array, Array]:
+    """Symmetric int8 quantization with per-tensor (or per-`axis`) scale."""
+    absmax = jnp.max(jnp.abs(x)) if axis is None else \
+        jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale_ = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale_), -127, 127).astype(jnp.int8)
+    return q, scale_.astype(jnp.float32)
+
+
+def dequantize_int8(q: Array, scale_: Array) -> Array:
+    return q.astype(jnp.float32) * scale_
+
+
+@register("compress_int8")
+def compress_int8(x):
+    return quantize_int8(x)
+
+
+@register("decompress_int8")
+def decompress_int8(pair):
+    q, s = pair
+    return dequantize_int8(q, s)
+
+
+class ErrorFeedbackCompressor:
+    """int8 gradient compression with error feedback (EF-SGD style).
+
+    State: the residual of the previous quantization, added back before the
+    next one — keeps compressed all-reduce unbiased over time.  Used by
+    `dist.collectives.compressed_psum` (beyond-paper optimization; the
+    in-stream port is the paper's hook for it).
+    """
+
+    def init(self, grads):
+        return jax.tree_util.tree_map(jnp.zeros_like, grads)
+
+    def compress(self, grads, residual):
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        leaves_r = treedef.flatten_up_to(residual)
+        qs, res = [], []
+        for g, r in zip(leaves_g, leaves_r):
+            g = g + r
+            q, s = quantize_int8(g)
+            qs.append((q, s))
+            res.append(g - dequantize_int8(q, s))
+        return treedef.unflatten(qs), treedef.unflatten(res)
+
+    @staticmethod
+    def decompress(qs):
+        return jax.tree_util.tree_map(
+            lambda p: dequantize_int8(*p), qs,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def chunk_pipeline(*names_and_kwargs) -> Callable:
+    """Compose registered accelerators: chunk_pipeline(('cast', {...}), ...)."""
+    fns = []
+    for item in names_and_kwargs:
+        if isinstance(item, str):
+            fns.append(get(item))
+        else:
+            name, kw = item
+            fns.append(functools.partial(get(name), **kw))
+
+    def run(x):
+        for f in fns:
+            x = f(x)
+        return x
+
+    return run

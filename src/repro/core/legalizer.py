@@ -1,0 +1,245 @@
+"""Transfer legalizer — reshape 1-D transfers to what the fabric allows.
+
+Paper §2.3 / Fig. 4: the legalizer accepts a 1-D transfer and splits it so
+that every emitted burst is legal for the selected protocol(s):
+
+* AXI4        : bursts of at most 256 beats or 4 KiB (whichever first) and
+                never crossing a 4 KiB page boundary;
+* AXI4-Lite   : no bursts — single bus-sized beats;
+* AXI4-Stream : unlimited burst length (no addresses / pages);
+* OBI         : no bursts — single bus-sized beats;
+* TileLink UH : power-of-two burst lengths, naturally aligned;
+* Init        : generator — follows the *destination* protocol's rules.
+
+Both the source and destination protocols' constraints are honoured: the
+emitted burst boundary set is the union of both sides' cut points, so every
+burst is legal on both ports (paper: 'The source and destination protocols'
+requirements are considered to guarantee only legal transfers are emitted.')
+
+This repo adds a second fabric: TPU tiles.  `legalize_tile` rounds 2-D VMEM
+tiles to hardware lane/sublane multiples ((8,128) fp32, (16,128) bf16,
+(32,128) int8) and `dma_granule` alignment (512 B) — the TPU analogue of
+page/burst legalization, consumed by the Pallas kernel generators.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+from .descriptor import (GENERATOR_PROTOCOLS, BackendOptions, Protocol,
+                         Transfer1D)
+
+PAGE_SIZE = 4096          # AXI 4 KiB page rule
+AXI_MAX_BEATS = 256       # AXI4 burst cap in beats
+TPU_DMA_GRANULE = 512     # bytes; efficient TPU DMA granularity
+TPU_LANES = 128           # lane count of a VREG tile
+
+#: sublane multiple per dtype itemsize (fp32→8, bf16→16, int8/fp8→32)
+TPU_SUBLANES: Dict[int, int] = {4: 8, 2: 16, 1: 32}
+
+
+@dataclass(frozen=True)
+class ProtocolRules:
+    """Burst legality of one protocol (paper Table 3)."""
+
+    supports_bursts: bool
+    max_burst_bytes: int          # 0 = unlimited
+    page_size: int                # 0 = no page rule
+    pow2_only: bool = False
+
+
+def rules_for(protocol: Protocol, bus_width: int) -> ProtocolRules:
+    if protocol == Protocol.AXI4:
+        return ProtocolRules(True, min(AXI_MAX_BEATS * bus_width, PAGE_SIZE),
+                             PAGE_SIZE)
+    if protocol in (Protocol.AXI_LITE, Protocol.OBI):
+        return ProtocolRules(False, bus_width, 0)
+    if protocol == Protocol.AXI_STREAM:
+        return ProtocolRules(True, 0, 0)
+    if protocol == Protocol.TILELINK:
+        # TL-UH: power-of-two, naturally aligned; practical cap 4 KiB.
+        return ProtocolRules(True, PAGE_SIZE, PAGE_SIZE, pow2_only=True)
+    if protocol == Protocol.INIT:
+        # Generator: no constraints of its own.
+        return ProtocolRules(True, 0, 0)
+    if protocol in (Protocol.HBM, Protocol.VMEM, Protocol.ICI, Protocol.HOST):
+        # TPU DMA: treat 4 MiB as a descriptor cap, no page rule at this level.
+        return ProtocolRules(True, 4 << 20, 0)
+    raise ValueError(f"unknown protocol {protocol}")
+
+
+def _page_cuts(addr: int, length: int, page: int) -> Iterator[int]:
+    """Offsets (relative to transfer start) where a page boundary is crossed."""
+    if page <= 0:
+        return
+    first = (addr // page + 1) * page
+    cut = first
+    while cut < addr + length:
+        yield cut - addr
+        cut += page
+
+
+def _largest_pow2_leq(n: int) -> int:
+    return 1 << (n.bit_length() - 1)
+
+
+def _pow2_aligned_bursts(addr: int, addr2: Optional[int], length: int,
+                         cap: int) -> Iterator[int]:
+    """Yield burst lengths for a pow2/naturally-aligned protocol (TileLink).
+
+    Classic address-alignment walk: each burst is the largest power of two
+    that is (a) <= remaining length, (b) <= cap, (c) naturally aligned at
+    BOTH port addresses (`addr2=None` for generator sources).
+    """
+    while length > 0:
+        joint = addr if addr2 is None else (addr | addr2)
+        align = joint & -joint if joint else cap or _largest_pow2_leq(length)
+        step = min(align or cap, _largest_pow2_leq(length), cap)
+        step = max(step, 1)
+        yield step
+        addr += step
+        if addr2 is not None:
+            addr2 += step
+        length -= step
+
+
+def legalize(transfer: Transfer1D, bus_width: int = 8,
+             with_error_addrs: bool = False) -> List[Transfer1D]:
+    """Split `transfer` into protocol-legal bursts (paper Fig. 4).
+
+    Returns the list of emitted bursts, in order.  Zero-length transfers
+    legalize to an empty list (the RTL optionally rejects them; we drop).
+    """
+    if transfer.length == 0:
+        return []
+    src_rules = rules_for(transfer.src_protocol, bus_width)
+    dst_rules = rules_for(transfer.dst_protocol, bus_width)
+    src_is_gen = transfer.src_protocol in GENERATOR_PROTOCOLS
+
+    cap = transfer.options.max_burst or 0
+    for r in ((dst_rules,) if src_is_gen else (src_rules, dst_rules)):
+        if r.max_burst_bytes:
+            cap = min(cap, r.max_burst_bytes) if cap else r.max_burst_bytes
+    if transfer.options.reduce_len:
+        cap = min(cap, transfer.options.reduce_len) if cap \
+            else transfer.options.reduce_len
+
+    # Collect mandatory cut offsets from page rules on both ports.
+    cuts = set()
+    if not src_is_gen and src_rules.page_size:
+        cuts.update(_page_cuts(transfer.src_addr, transfer.length,
+                               src_rules.page_size))
+    if dst_rules.page_size:
+        cuts.update(_page_cuts(transfer.dst_addr, transfer.length,
+                               dst_rules.page_size))
+    cuts.add(transfer.length)
+    boundaries = sorted(cuts)
+
+    pow2 = (dst_rules.pow2_only or (not src_is_gen and src_rules.pow2_only))
+
+    bursts: List[Transfer1D] = []
+    start = 0
+    for boundary in boundaries:
+        seg = boundary - start
+        offset = start
+        while seg > 0:
+            if pow2:
+                # walk pow2-aligned inside the segment (both ports)
+                for blen in _pow2_aligned_bursts(
+                        transfer.dst_addr + offset,
+                        None if src_is_gen else transfer.src_addr + offset,
+                        seg, cap or _largest_pow2_leq(seg)):
+                    bursts.append(transfer.shifted(offset, offset, blen))
+                    offset += blen
+                seg = 0
+            else:
+                blen = min(seg, cap) if cap else seg
+                bursts.append(transfer.shifted(offset, offset, blen))
+                offset += blen
+                seg -= blen
+        start = boundary
+    return bursts
+
+
+def legal_latency(num_midends: int, has_legalizer: bool = True,
+                  tensor_nd_zero_latency: bool = False) -> int:
+    """Paper §4.3 latency rule: 2 cycles descriptor→first read request with
+    hardware legalization, 1 without; +1 per mid-end; the tensor_ND mid-end
+    can be configured for 0 cycles."""
+    base = 2 if has_legalizer else 1
+    extra = num_midends
+    if tensor_nd_zero_latency and num_midends > 0:
+        extra -= 1
+    return base + extra
+
+
+# --------------------------------------------------------------------------
+# TPU tile legalization — the second fabric.
+# --------------------------------------------------------------------------
+
+def sublane_multiple(itemsize: int) -> int:
+    try:
+        return TPU_SUBLANES[itemsize]
+    except KeyError:
+        raise ValueError(f"unsupported itemsize {itemsize}") from None
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def legalize_tile(shape: Tuple[int, int], itemsize: int,
+                  vmem_budget: int = 64 * 1024 * 1024,
+                  max_tile: Tuple[int, int] = (1024, 2048),
+                  ) -> Tuple[int, int]:
+    """Round a requested VMEM tile to TPU-legal, budget-respecting shape.
+
+    - second-minor dim → multiple of the dtype sublane count,
+    - minor dim → multiple of 128 lanes,
+    - shrink (by halving the larger axis) until it fits `vmem_budget` bytes.
+
+    Mirrors what the RTL legalizer does for AXI: the *request* is arbitrary,
+    the *emitted* unit is hardware-legal.
+    """
+    sub = sublane_multiple(itemsize)
+    rows = max(min(shape[0], max_tile[0]), 1)
+    cols = max(min(shape[1], max_tile[1]), 1)
+    rows = _round_up(rows, sub)
+    cols = _round_up(cols, TPU_LANES)
+    while rows * cols * itemsize > vmem_budget:
+        if rows > sub and rows >= cols:
+            rows = max(sub, _round_up(rows // 2, sub))
+        elif cols > TPU_LANES:
+            cols = max(TPU_LANES, _round_up(cols // 2, TPU_LANES))
+        else:
+            break
+    return rows, cols
+
+
+def legal_dma_len(length: int) -> int:
+    """Round a 1-D HBM DMA length up to the efficient 512-B granule."""
+    return _round_up(max(length, 1), TPU_DMA_GRANULE)
+
+
+def check_legal(bursts: Sequence[Transfer1D], bus_width: int = 8) -> None:
+    """Assert every burst satisfies both ports' rules.  Raises ValueError."""
+    for b in bursts:
+        src_is_gen = b.src_protocol in GENERATOR_PROTOCOLS
+        for proto, addr in (
+                () if src_is_gen else ((b.src_protocol, b.src_addr),)
+        ) + ((b.dst_protocol, b.dst_addr),):
+            r = rules_for(proto, bus_width)
+            if r.max_burst_bytes and b.length > r.max_burst_bytes:
+                raise ValueError(
+                    f"burst of {b.length} B exceeds {proto} cap "
+                    f"{r.max_burst_bytes} B")
+            if r.page_size:
+                if addr // r.page_size != (addr + b.length - 1) // r.page_size:
+                    raise ValueError(f"burst crosses {proto} page boundary")
+            if r.pow2_only:
+                if b.length & (b.length - 1):
+                    raise ValueError(f"{proto} burst {b.length} not pow2")
+                if addr % b.length:
+                    raise ValueError(
+                        f"{proto} burst at {addr:#x} not naturally aligned")

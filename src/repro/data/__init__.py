@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMSource, Prefetcher, make_pipeline

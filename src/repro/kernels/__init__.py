@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships three files:
+  <name>.py — `pl.pallas_call` + explicit `BlockSpec` VMEM tiling,
+  ops.py    — the jit'd public wrapper (backend dispatch pallas/xla),
+  ref.py    — the pure-jnp oracle the tests `assert_allclose` against.
+
+Kernels:
+  copy_engine      — the iDMA transport layer on the HBM↔VMEM fabric
+  init_engine      — the Init pseudo-protocol (constant/iota/PRNG fill)
+  matmul_dma       — double-buffered blocked MXU matmul (+ fused epilogue)
+  flash_attention  — fused GQA/SWA/softcap prefill-and-train attention
+  decode_attention — single-token decode over long KV caches
+  ssd              — Mamba-2 state-space-duality chunked scan
+"""
+
+from . import runtime

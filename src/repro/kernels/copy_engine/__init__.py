@@ -1,0 +1,2 @@
+from .ops import copy_2d, strided_copy_nd
+from .ref import copy_2d_ref

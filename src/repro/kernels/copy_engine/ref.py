@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the copy engine."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def copy_2d_ref(x: jax.Array, transform: Optional[Callable] = None,
+                out_dtype=None) -> jax.Array:
+    out = x if transform is None else transform(x)
+    return out.astype(out_dtype or x.dtype)
+
+
+def strided_copy_nd_ref(x: jax.Array) -> jax.Array:
+    return jnp.asarray(x)

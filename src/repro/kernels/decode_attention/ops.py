@@ -1,0 +1,30 @@
+"""jit'd public wrapper for decode attention."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+
+from . import decode_attention as da, ref
+from repro.kernels.runtime import default_backend, resolve_interpret
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "scale", "block_k", "backend", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: Optional[Union[int, jax.Array]] = None,
+                     window: int = 0, softcap: float = 0.0,
+                     scale: Optional[float] = None,
+                     block_k: int = da.DEFAULT_BK,
+                     backend: Optional[str] = None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.decode_attention_ref(q, k, v, kv_len=kv_len,
+                                        window=window, softcap=softcap,
+                                        scale=scale)
+    return da.decode_attention_pallas(
+        q, k, v, kv_len=kv_len, window=window, softcap=softcap, scale=scale,
+        block_k=block_k, interpret=resolve_interpret(interpret))

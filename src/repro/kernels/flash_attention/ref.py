@@ -1,0 +1,43 @@
+"""Pure-jnp oracle: naive attention with GQA / causal / SWA / softcap."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0,
+                  scale: Optional[float] = None,
+                  q_offset: int = 0) -> jax.Array:
+    """q (B, Hq, Sq, D), k/v (B, Hkv, Sk, D) → (B, Hq, Sq, D).
+
+    `q_offset` — absolute position of q[0] (decode: Sk - Sq).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = q_offset + jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import memset, iota_fill, prng_fill
+from .ref import memset_ref, iota_fill_ref, prng_fill_ref

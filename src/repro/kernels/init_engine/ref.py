@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Init pseudo-protocol generators."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import splitmix32
+
+
+def memset_ref(shape: Tuple[int, int], value, dtype=jnp.float32) -> jax.Array:
+    return jnp.full(shape, value, dtype)
+
+
+def iota_fill_ref(shape: Tuple[int, int], start: int = 0,
+                  dtype=jnp.int32) -> jax.Array:
+    n = shape[0] * shape[1]
+    return (jnp.arange(n, dtype=jnp.int32) + start).astype(dtype).reshape(shape)
+
+
+def prng_bits_ref(shape: Tuple[int, int], seed: int = 0) -> jax.Array:
+    n = shape[0] * shape[1]
+    ctr = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(seed)
+    return splitmix32(ctr).reshape(shape)
+
+
+def prng_fill_ref(shape: Tuple[int, int], seed: int = 0,
+                  dtype=jnp.float32) -> jax.Array:
+    bits = prng_bits_ref(shape, seed)
+    if jnp.dtype(dtype) == jnp.uint32:
+        return bits
+    if jnp.dtype(dtype) == jnp.int8:
+        return (bits & jnp.uint32(0xFF)).astype(jnp.uint8).view(jnp.int8) \
+            .reshape(shape)
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(1 << 24)
+    return u.astype(dtype)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the blocked matmul."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array, out_dtype=None,
+               epilogue: Optional[Callable] = None) -> jax.Array:
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if epilogue is not None:
+        acc = epilogue(acc)
+    return acc.astype(out_dtype or x.dtype)

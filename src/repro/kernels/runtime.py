@@ -1,0 +1,34 @@
+"""Kernel runtime knobs shared by all kernel wrappers.
+
+On a real TPU, `default_backend()` is "pallas" with `interpret=False`.
+In this CPU container the kernels still run — in Pallas interpret mode —
+so tests sweep shapes/dtypes against the refs; the distributed dry-run
+path selects "xla" explicitly (Pallas cannot lower on the CPU SPMD
+placeholder backend).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:  # pragma: no cover - uninitialized backend
+        return False
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env in ("pallas", "xla"):
+        return env
+    return "pallas" if on_tpu() else "xla"
+
+
+def resolve_interpret(interpret=None) -> bool:
+    if interpret is not None:
+        return interpret
+    return not on_tpu()

@@ -1,0 +1,2 @@
+from .ops import ssd
+from .ref import ssd_ref, ssd_chunked_ref

@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for the Mamba-2 SSD scan.
+
+`ssd_ref`          — sequential lax.scan over time steps (ground truth).
+`ssd_chunked_ref`  — chunked einsum formulation (same math as the Pallas
+                     kernel, vectorized over chunks; used by the XLA model
+                     path where Pallas cannot lower).  Both agree to fp32
+                     tolerance; tests assert kernel == ssd_ref and
+                     ssd_chunked_ref == ssd_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, D: jax.Array,
+            B: jax.Array, C: jax.Array) -> jax.Array:
+    """x (Bb,H,S,P) dt (Bb,H,S) A (H,) D (H,) B/C (Bb,G,S,N) → (Bb,H,S,P)."""
+    Bb, H, S, P = x.shape
+    _, G, _, N = B.shape
+    hpg = H // G
+    Bx = jnp.repeat(B, hpg, axis=1)     # (Bb,H,S,N)
+    Cx = jnp.repeat(C, hpg, axis=1)
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bx.astype(jnp.float32)
+    Cf = Cx.astype(jnp.float32)
+
+    decay = jnp.exp(Af[None, :, None] * dtf)        # (Bb,H,S)
+
+    def step(h, inp):
+        d_t, dt_t, b_t, c_t, x_t = inp
+        # h (Bb,H,N,P)
+        h = h * d_t[..., None, None] + \
+            (dt_t[..., None, None] * b_t[..., :, None] * x_t[..., None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    inputs = (decay.transpose(2, 0, 1), dtf.transpose(2, 0, 1),
+              Bf.transpose(2, 0, 1, 3), Cf.transpose(2, 0, 1, 3),
+              xf.transpose(2, 0, 1, 3))
+    _, ys = jax.lax.scan(step, h0, inputs)
+    y = ys.transpose(1, 2, 0, 3)                     # (Bb,H,S,P)
+    y = y + D.astype(jnp.float32)[None, :, None, None] * xf
+    return y.astype(x.dtype)
+
+
+def ssd_chunked_ref(x: jax.Array, dt: jax.Array, A: jax.Array, D: jax.Array,
+                    B: jax.Array, C: jax.Array, chunk: int = 128,
+                    return_state: bool = False):
+    """Chunked SSD — the kernel's math in pure jnp (XLA model path).
+
+    `return_state=True` also returns the final (Bb, H, N, P) state —
+    the prefill→decode handoff."""
+    Bb, H, S, P = x.shape
+    _, G, _, N = B.shape
+    hpg = H // G
+    L = chunk
+    nc = S // L
+    assert S % L == 0, "pad sequence to the chunk size first"
+
+    # keep the big (x, B, C) tensors in their storage dtype (bf16 when the
+    # caller opts in via rcfg.ssd_compute_dtype); the decay/cumsum path and
+    # all contractions accumulate in fp32
+    xf = x.reshape(Bb, H, nc, L, P)
+    dtf = dt.astype(jnp.float32).reshape(Bb, H, nc, L)
+    Bf = jnp.repeat(B, hpg, axis=1).reshape(Bb, H, nc, L, N)
+    Cf = jnp.repeat(C, hpg, axis=1).reshape(Bb, H, nc, L, N)
+    Af = A.astype(jnp.float32)
+
+    adt = Af[None, :, None, None] * dtf              # (Bb,H,nc,L)
+    cum = jnp.cumsum(adt, axis=-1)
+    total = cum[..., -1]                             # (Bb,H,nc)
+
+    # intra-chunk
+    seg = cum[..., :, None] - cum[..., None, :]      # (Bb,H,nc,L,L)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bhctn,bhcsn->bhcts", Cf, Bf,
+                        preferred_element_type=jnp.float32) * decay * \
+        dtf[..., None, :]
+    y_intra = jnp.einsum("bhcts,bhcsp->bhctp", scores.astype(x.dtype), xf,
+                         preferred_element_type=jnp.float32)
+
+    # chunk states
+    w = jnp.exp(total[..., None] - cum) * dtf        # (Bb,H,nc,L)
+    chunk_states = jnp.einsum("bhcln,bhclp->bhcnp",
+                              (Bf * w[..., None].astype(Bf.dtype)), xf,
+                              preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over chunk index
+    def carry(h, inp):
+        tot_c, st_c = inp                            # (Bb,H), (Bb,H,N,P)
+        h_next = jnp.exp(tot_c)[..., None, None] * h + st_c
+        return h_next, h
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        carry, h0, (total.transpose(2, 0, 1),
+                    chunk_states.transpose(2, 0, 1, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 2, 0, 3, 4)       # (Bb,H,nc,N,P)
+
+    y_inter = jnp.exp(cum)[..., None] * \
+        jnp.einsum("bhctn,bhcnp->bhctp", Cf,
+                   h_prevs.astype(Cf.dtype),
+                   preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(Bb, H, S, P)
+    y = y + D.astype(jnp.float32)[None, :, None, None] * \
+        x.astype(jnp.float32)
+    if return_state:
+        return y.astype(x.dtype), h_final
+    return y.astype(x.dtype)

@@ -1,0 +1,217 @@
+"""Compiled-artifact analysis: collective bytes, roofline terms.
+
+`cost_analysis()` gives HLO FLOPs and bytes; collective traffic is NOT in
+there, so we parse the post-SPMD optimized HLO (`compiled.as_text()`) and
+sum the *result* byte size of every collective op, per op kind.
+
+Roofline terms (TPU v5e targets):
+  compute   = FLOPs / (chips × 197e12 bf16 FLOP/s)
+  memory    = bytes / (chips × 819e9 B/s HBM)
+  collective= coll_bytes / (chips × 50e9 B/s per ICI link)
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string, e.g. 'bf16[128,1024]{1,0}' or a
+    tuple '(f32[8,4]{1,0}, f32[8,4]{1,0})'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# one HLO instruction: "%name = TYPE opcode(...)" (possibly fused suffixes
+# like all-reduce-start); capture the type string and the opcode.
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([a-z0-9-]+)(?:\.\d+)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective op kind over the optimized HLO."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        type_str, opcode = m.group(1), m.group(2)
+        for coll in COLLECTIVE_OPS:
+            # match all-reduce, all-reduce-start, all-gather-done, etc.
+            if opcode == coll or opcode.startswith(coll + "-"):
+                if opcode.endswith("-done"):
+                    break                      # avoid double counting
+                out[coll] += _shape_bytes(type_str)
+                counts[coll] += 1
+                break
+    out["_counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    name: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float = field(init=False)
+    memory_s: float = field(init=False)
+    collective_s: float = field(init=False)
+
+    def __post_init__(self) -> None:
+        self.compute_s = self.flops_per_device / PEAK_FLOPS
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.collective_s = self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound: max of the three terms (perfect overlap)
+        is the roofline; we report the max term as the bound."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "name": self.name, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze_compiled(name: str, mesh_desc: str, n_devices: int,
+                     compiled) -> Dict:
+    """Extract memory/cost/collective analysis from a compiled executable.
+
+    flops/bytes/collectives come from the trip-count-aware HLO parser
+    (`launch.hlo_cost`) — `compiled.cost_analysis()` counts scan bodies
+    once and is reported only as `cost_raw` for reference.  All numbers
+    are PER DEVICE (the SPMD module is the per-device program).
+    """
+    from .hlo_cost import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:                      # pragma: no cover
+        mem_info = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    totals = analyze_hlo(hlo)
+
+    rl = Roofline(name=name, mesh=mesh_desc, n_devices=n_devices,
+                  flops_per_device=totals.flops,
+                  bytes_per_device=totals.bytes,
+                  collective_bytes_per_device=totals.total_collective_bytes)
+    return {
+        "name": name, "mesh": mesh_desc, "n_devices": n_devices,
+        "cost": {"flops": totals.flops, "bytes_accessed": totals.bytes,
+                 "transcendentals": totals.transcendentals},
+        "cost_raw": {"flops": float(cost.get("flops", 0.0)),
+                     "bytes_accessed":
+                         float(cost.get("bytes accessed", 0.0))},
+        "memory": mem_info,
+        "collectives": {"bytes": totals.collective_bytes,
+                        "counts": totals.collective_counts,
+                        "total_bytes": totals.total_collective_bytes},
+        "while_trips": totals.while_trips,
+        "roofline": rl.as_dict(),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for training;
+    2·N·D for a forward-only cell (prefill), 2·N_active per decoded token."""
+    n_active = active_params(cfg)
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count."""
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    n = 0.0
+    # embeddings (active: lookup is sparse; count unembed matmul)
+    n += cfg.vocab_size * d
+    per_layer = {}
+    if cfg.n_heads:
+        attn = d * cfg.n_heads * dh + 2 * d * cfg.n_kv_heads * dh + \
+            cfg.n_heads * dh * d
+    else:
+        attn = 0
+    if cfg.moe is not None:
+        mc = cfg.moe
+        ffn = 3 * d * mc.d_ff_expert * mc.top_k
+        if mc.n_shared_experts:
+            ffn += 3 * d * mc.d_ff_shared
+    else:
+        ffn = 3 * d * cfg.d_ff
+    ssm = 0
+    if cfg.ssm is not None:
+        from repro.models.ssm import ssm_dims, conv_dim
+        d_inner, H, Pd, G, N = ssm_dims(cfg)
+        d_in_proj = 2 * d_inner + 2 * G * N + H
+        ssm = d * d_in_proj + d_inner * d + \
+            cfg.ssm.conv_kernel * conv_dim(cfg)
+    for kinds, rep in cfg.pattern:
+        for kind in kinds:
+            if kind in ("attn_full", "attn_swa"):
+                n += rep * (attn + ffn)
+            elif kind == "ssm":
+                n += rep * ssm
+            else:  # hybrid
+                n += rep * (attn + ssm + ffn)
+    if cfg.encoder is not None:
+        n += cfg.encoder.n_layers * (attn + ffn)
+        n += cfg.n_layers * attn          # cross-attention
+    return n

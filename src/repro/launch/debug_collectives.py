@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+"""Debug tool: list the heaviest collectives (trip-weighted) with their
+op_name metadata, so §Perf iterations know what to attack."""
+
+import argparse
+import re
+
+import jax
+
+from repro.configs import get
+from repro.configs.base import RunConfig
+from repro.launch.hlo_cost import (COLLECTIVE_OPS, parse_module,
+                                   shape_bytes, _TRIP_RE)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--bytes", action="store_true",
+                    help="rank by HBM bytes instead of collective bytes")
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    rcfg = RunConfig(kernels="xla", sequence_parallel=not args.no_sp)
+    cell = build_cell(cfg, args.shape, mesh, rcfg)
+    with mesh:
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate_argnums) \
+            .lower(*cell.args).compile()
+    hlo = compiled.as_text()
+    comps, entry = parse_module(hlo)
+
+    # multipliers (same walk as hlo_cost, simplified)
+    from repro.launch.hlo_cost import analyze_hlo
+    mult = {entry: 1.0}
+    order = [entry]
+    seen = set()
+    i = 0
+    while i < len(order):
+        cname = order[i]; i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trip = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                for pat, k in ((r"body=%?([\w\.\-]+)", trip),
+                               (r"condition=%?([\w\.\-]+)", trip + 1)):
+                    mm = re.search(pat, ins.rest)
+                    if mm:
+                        callee = mm.group(1)
+                        e = (cname, ins.name, callee)
+                        if e not in seen:
+                            seen.add(e)
+                            mult[callee] = mult.get(callee, 0) + m * k
+                            if callee not in order:
+                                order.append(callee)
+            elif ins.opcode in ("fusion", "call", "conditional"):
+                for callee in re.findall(
+                        r"(?:calls|to_apply)=%?([\w\.\-]+)", ins.rest):
+                    e = (cname, ins.name, callee)
+                    if e not in seen:
+                        seen.add(e)
+                        mult[callee] = mult.get(callee, 0) + m
+                        if callee not in order:
+                            order.append(callee)
+
+    rows = []
+    if args.bytes:
+        from repro.launch.hlo_cost import (_META_OPS, _OPERAND_RE)
+        fusion_comps = set()
+        for comp in comps.values():
+            for ins in comp.instrs:
+                if ins.opcode == "fusion":
+                    for callee in re.findall(r"calls=%?([\w\.\-]+)",
+                                             ins.rest):
+                        fusion_comps.add(callee)
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0)
+            if m == 0 or cname in fusion_comps:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode in _META_OPS or ins.opcode in (
+                        "while", "call", "conditional"):
+                    continue
+                if ins.opcode in ("dynamic-slice", "gather"):
+                    b = 2 * shape_bytes(ins.type_str)
+                elif ins.opcode in ("dynamic-update-slice", "scatter"):
+                    ops = _OPERAND_RE.findall(ins.rest.split(")")[0])
+                    szs = [shape_bytes(comp.types[o]) for o in ops
+                           if o in comp.types]
+                    b = 2 * (min(szs) if szs else
+                             shape_bytes(ins.type_str))
+                else:
+                    b = shape_bytes(ins.type_str)
+                    for o in _OPERAND_RE.findall(
+                            ins.rest.split("), ")[0] if "), " in ins.rest
+                            else ins.rest):
+                        t = comp.types.get(o)
+                        if t:
+                            b += shape_bytes(t)
+                mo = re.search(r'op_name="([^"]*)"', ins.rest)
+                rows.append((b * m, ins.opcode, ins.type_str[:60],
+                             (mo.group(1) if mo else "?")[:110], m))
+    else:
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0)
+            if m == 0:
+                continue
+            for ins in comp.instrs:
+                for coll in COLLECTIVE_OPS:
+                    if (ins.opcode == coll or
+                            ins.opcode.startswith(coll + "-")) and \
+                            not ins.opcode.endswith("-done"):
+                        b = shape_bytes(ins.type_str) * m
+                        mo = re.search(r'op_name="([^"]*)"', ins.rest)
+                        rows.append((b, coll, ins.type_str[:60],
+                                     (mo.group(1) if mo else "?")[:110], m))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    kind = "HBM" if args.bytes else "collective"
+    print(f"total weighted {kind} bytes/device: {total/1e9:.2f} GB "
+          f"({len(rows)} sites)")
+    for b, coll, t, opn, m in rows[:args.top]:
+        print(f"  {b/1e9:8.3f} GB  x{m:<5.0f} {coll:20s} {t:60s} {opn}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")   # quiet SPMD warnings
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production meshes, print memory/cost analysis, and dump the roofline
+artifacts that EXPERIMENTS.md §Dry-run/§Roofline read.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`) —
+the XLA_FLAGS line above executes before any jax import and fakes 512
+host devices; everything else in the repo sees the real device count.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, get
+from repro.configs.base import RunConfig
+from repro.launch.analysis import analyze_compiled, model_flops
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rcfg: RunConfig, out_dir: str, verbose: bool = True) -> dict:
+    cfg = get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+    n_dev = mesh.devices.size
+    cell = build_cell(cfg, shape_name, mesh, rcfg)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.fn,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    result = analyze_compiled(cell.name, mesh_desc, n_dev, compiled)
+    result["lower_s"] = t_lower
+    result["compile_s"] = t_compile
+    result["model_flops_global"] = model_flops(cfg, cfg.shape(shape_name))
+    result["shape"] = {"name": shape_name,
+                       "seq_len": cfg.shape(shape_name).seq_len,
+                       "global_batch": cfg.shape(shape_name).global_batch,
+                       "kind": cfg.shape(shape_name).kind}
+    result["run_config"] = {
+        "sequence_parallel": rcfg.sequence_parallel,
+        "remat": rcfg.remat, "microbatch": rcfg.microbatch,
+        "attn_chunk_q": rcfg.attn_chunk_q, "attn_chunk_k": rcfg.attn_chunk_k,
+    }
+
+    if verbose:
+        print(f"== {cell.name} on {mesh_desc} ==")
+        print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"   memory_analysis: {result['memory']}")
+        print(f"   cost_analysis: {result['cost']}")
+        print(f"   collectives: {result['collectives']['bytes']}")
+        rl = result["roofline"]
+        print(f"   roofline: compute {rl['compute_s']:.4g}s  memory "
+              f"{rl['memory_s']:.4g}s  collective {rl['collective_s']:.4g}s"
+              f"  → {rl['bottleneck']}-bound")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = "pod2" if multi_pod else "pod1"
+        suffix = ""
+        if os.environ.get("REPRO_VARIANT"):
+            suffix = "_" + os.environ["REPRO_VARIANT"]
+        fname = f"{arch}_{shape_name}_{tag}{suffix}.json".replace("/", "-")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel residual sharding")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--attn-chunk-q", type=int, default=1024)
+    ap.add_argument("--attn-chunk-k", type=int, default=2048)
+    ap.add_argument("--moe-reduce", default="combine_first",
+                    choices=["psum", "scatter", "combine_first"])
+    ap.add_argument("--moe-comm-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--ssd-chunk", type=int, default=0)
+    ap.add_argument("--ssm-tp", action="store_true")
+    ap.add_argument("--ssd-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--decode-ring", type=int, default=128)
+    ap.add_argument("--decode-kv-shard", default="auto",
+                    choices=["auto", "heads", "seq"])
+    ap.add_argument("--variant", default=None,
+                    help="artifact suffix for perf-iteration runs")
+    args = ap.parse_args()
+
+    if args.variant:
+        os.environ["REPRO_VARIANT"] = args.variant
+    rcfg = RunConfig(kernels="xla",
+                     sequence_parallel=not args.no_sp,
+                     microbatch=args.microbatch,
+                     attn_chunk_q=args.attn_chunk_q,
+                     attn_chunk_k=args.attn_chunk_k,
+                     moe_reduce=args.moe_reduce,
+                     moe_comm_dtype=args.moe_comm_dtype,
+                     ssd_chunk=args.ssd_chunk,
+                     ssd_compute_dtype=args.ssd_dtype,
+                     ssm_head_tp=args.ssm_tp,
+                     decode_kv_shard=args.decode_kv_shard,
+                     decode_ring=args.decode_ring)
+
+    cells = []
+    if args.all:
+        for name, cfg in sorted(REGISTRY.items()):
+            for s in cfg.shapes:
+                cells.append((name, s.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, rcfg, args.out)
+            except Exception as e:
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"!! FAILED {arch}:{shape} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} cell(s) failed:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nAll {len(cells) * len(meshes)} dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,409 @@
+"""Trip-count-aware HLO cost model.
+
+`compiled.cost_analysis()` counts every `while` (lax.scan) body ONCE —
+useless for scanned-layer programs.  This module re-derives flops / bytes /
+collective-bytes by parsing the optimized HLO text, building the
+computation call graph, and weighting each computation by its execution
+multiplier (`known_trip_count` for while bodies, call-site multiplicity
+for fusions/calls).
+
+Accounting rules (mirrors XLA's HloCostAnalysis semantics):
+  * flops: `dot` ops → 2 × |result| × K (K = prod of lhs contracting
+    dims), counted wherever they appear (including inside fusions);
+    `convolution` likewise via output×kernel size.
+  * bytes: per instruction, |result| + Σ|operands| — EXCEPT pure-metadata
+    ops (tuple/gte/bitcast/parameter/constant) and except instructions
+    inside fusion computations (the fusion call site is the memory
+    boundary).
+  * collectives: result bytes of all-reduce / all-gather / reduce-scatter
+    / all-to-all / collective-permute, trip-weighted.
+
+Validated against analytical matmul/scan counts in tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "token": 0,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_SIMPLE_TYPE_RE = re.compile(
+    r"^([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*")
+_OPCODE_RE = re.compile(r"^([\w\-]+)\(")
+
+
+def _parse_instr(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """Parse '%name = TYPE opcode(rest' with balanced tuple types."""
+    m = _INSTR_HEAD_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_str = rest[:i + 1]
+        rest = rest[i + 1:].lstrip()
+    else:
+        mt = _SIMPLE_TYPE_RE.match(rest)
+        if not mt:
+            return None
+        type_str = mt.group(1)
+        rest = rest[mt.end():]
+    mo = _OPCODE_RE.match(rest)
+    if not mo:
+        return None
+    return name, type_str, mo.group(1), rest[mo.end():]
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype,
+                    [int(d) for d in dims.split(",") if d] if dims else []))
+    return out
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _numel(type_str: str) -> int:
+    total = 0
+    for _dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                     # operands + attributes tail
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+
+
+_META_OPS = {"tuple", "get-tuple-element", "bitcast", "parameter",
+             "constant", "after-all", "domain", "partition-id",
+             "replica-id", "iota"}
+_CALLER_OPS = {"while", "fusion", "call", "conditional", "async-start"}
+
+
+def _fusion_param_reads(comp: Computation) -> Dict[int, Optional[int]]:
+    """Effective read bytes per fusion parameter.
+
+    A parameter whose only consumer is a `dynamic-slice` (the scan-body
+    per-layer weight/cache pick) is only read at the slice size; the
+    buffer operand of a root `dynamic-update-slice` is not read at all
+    (in-place update).  Everything else reads fully (None = full size).
+    """
+    param_idx: Dict[str, int] = {}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            m = re.match(r"\s*(\d+)", ins.rest)
+            if m:
+                param_idx[ins.name] = int(m.group(1))
+    consumers: Dict[str, List[Instr]] = {}
+    for ins in comp.instrs:
+        ops = _OPERAND_RE.findall(
+            ins.rest.split(")")[0] if ")" in ins.rest else ins.rest)
+        for o in ops:
+            if o in param_idx:
+                consumers.setdefault(o, []).append(ins)
+    out: Dict[int, Optional[int]] = {}
+    for pname, idx in param_idx.items():
+        cons = consumers.get(pname, [])
+        if cons and all(c.opcode in ("dynamic-slice", "gather", "slice")
+                        for c in cons):
+            out[idx] = sum(shape_bytes(c.type_str) for c in cons)
+        elif len(cons) == 1 and \
+                cons[0].opcode == "dynamic-update-slice" and \
+                cons[0].rest.split(")")[0].strip().startswith(
+                    ("%" + pname, pname)):
+            out[idx] = 0          # the in-place target buffer
+        else:
+            out[idx] = None
+    return out
+
+
+def _fusion_write_bytes(comp: Computation) -> Optional[int]:
+    """If the fusion root is a dynamic-update-slice, only the update
+    region is written; return its size, else None (full result)."""
+    root = comp.instrs[-1] if comp.instrs else None
+    if root is not None and root.opcode == "dynamic-update-slice":
+        ops = _OPERAND_RE.findall(root.rest.split(")")[0])
+        if len(ops) >= 2 and ops[1] in comp.types:
+            return shape_bytes(comp.types[ops[1]])
+    return None
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], str]:
+    """Returns ({name: computation}, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HEADER_RE.match(line.strip())
+        if m and line.strip().endswith("{"):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_instr(line)
+        if parsed:
+            ins = Instr(*parsed)
+            cur.instrs.append(ins)
+            cur.types[ins.name] = ins.type_str
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    result_elems = _numel(ins.type_str)
+    mc = _LHS_CONTRACT_RE.search(ins.rest)
+    contract_dims = [int(d) for d in mc.group(1).split(",") if d] if mc \
+        else []
+    # first operand = lhs
+    ops = _OPERAND_RE.findall(ins.rest.split("),")[0])
+    k = 1
+    if ops:
+        lhs_type = comp.types.get(ops[0])
+        if lhs_type:
+            dims_list = _shape_dims(lhs_type)
+            if dims_list:
+                dims = dims_list[0][1]
+                for d in contract_dims:
+                    if d < len(dims):
+                        k *= dims[d]
+    return 2.0 * result_elems * k
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_OPS})
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_OPS})
+    while_trips: List[Tuple[str, int]] = field(default_factory=list)
+    top_bytes: List[Tuple[float, str, str, str]] = field(
+        default_factory=list)      # (bytes, opcode, type, op_name)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_TRANS_OPS = {"exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+              "logistic", "sine", "cosine", "exponential-minus-one"}
+
+
+def analyze_hlo(hlo_text: str, collect_top: int = 0) -> CostTotals:
+    comps, entry = parse_module(hlo_text)
+    totals = CostTotals()
+
+    def note(nbytes, ins):
+        if collect_top:
+            mo = re.search(r'op_name="([^"]*)"', ins.rest)
+            totals.top_bytes.append(
+                (nbytes, ins.opcode, ins.type_str[:60],
+                 (mo.group(1) if mo else "?")[:110]))
+
+    # computation multipliers via worklist from ENTRY
+    mult: Dict[str, float] = {entry: 1.0}
+    order: List[str] = [entry]
+    seen_edges = set()
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            callees = _CALLS_RE.findall(ins.rest)
+            if not callees:
+                continue
+            if ins.opcode == "while":
+                trip = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                totals.while_trips.append((ins.name, trip))
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                for callee, k in ((body, trip), (cond, trip + 1)):
+                    if callee is None:
+                        continue
+                    edge = (cname, ins.name, callee)
+                    if edge in seen_edges:
+                        continue
+                    seen_edges.add(edge)
+                    mult[callee] = mult.get(callee, 0.0) + m * k
+                    if callee not in order:
+                        order.append(callee)
+            elif ins.opcode in ("fusion", "call", "conditional",
+                                "async-start", "custom-call"):
+                for callee in callees:
+                    edge = (cname, ins.name, callee)
+                    if edge in seen_edges:
+                        continue
+                    seen_edges.add(edge)
+                    mult[callee] = mult.get(callee, 0.0) + m
+                    if callee not in order:
+                        order.append(callee)
+            # reduce/map/scatter to_apply bodies are scalar computations —
+            # negligible; they get multiplier but their ops are tiny.
+
+    fusion_comps = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                for callee in _CALLS_RE.findall(ins.rest):
+                    fusion_comps.add(callee)
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_comps
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                totals.flops += m * _dot_flops(ins, comp)
+            if ins.opcode in _TRANS_OPS:
+                totals.transcendentals += m * _numel(ins.type_str)
+            is_coll = None
+            for coll in COLLECTIVE_OPS:
+                if ins.opcode == coll or \
+                        ins.opcode.startswith(coll + "-"):
+                    if not ins.opcode.endswith("-done"):
+                        is_coll = coll
+                    break
+            if is_coll:
+                b = shape_bytes(ins.type_str)
+                totals.collective_bytes[is_coll] += m * b
+                totals.collective_counts[is_coll] += m
+                totals.bytes += m * b        # wire + HBM touch
+                continue
+            if in_fusion:
+                continue                      # fusion boundary counts
+            if ins.opcode in _META_OPS:
+                continue
+            if ins.opcode in ("while", "call", "conditional"):
+                continue                      # bodies counted themselves
+            if ins.opcode == "fusion":
+                # slice-aware operand accounting (scan-body DS/DUS)
+                mcal = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+                fcomp = comps.get(mcal.group(1)) if mcal else None
+                b = None
+                if fcomp is not None:
+                    wb = _fusion_write_bytes(fcomp)
+                    b = wb if wb is not None else shape_bytes(ins.type_str)
+                    reads = _fusion_param_reads(fcomp)
+                    ops = _OPERAND_RE.findall(ins.rest.split(")")[0])
+                    for j, o in enumerate(ops):
+                        eff = reads.get(j)
+                        if eff is not None:
+                            b += eff
+                        else:
+                            t = comp.types.get(o)
+                            if t:
+                                b += shape_bytes(t)
+                if b is None:
+                    b = shape_bytes(ins.type_str)
+                    for o in _OPERAND_RE.findall(ins.rest.split(")")[0]):
+                        t = comp.types.get(o)
+                        if t:
+                            b += shape_bytes(t)
+                totals.bytes += m * b
+                note(m * b, ins)
+                continue
+            if ins.opcode in ("dynamic-slice", "gather"):
+                # only the sliced region moves, not the source buffer
+                totals.bytes += m * 2 * shape_bytes(ins.type_str)
+                note(m * 2 * shape_bytes(ins.type_str), ins)
+                continue
+            if ins.opcode in ("dynamic-update-slice", "scatter"):
+                # in-place update: read+write of the update region
+                op_names = _OPERAND_RE.findall(ins.rest.split(")")[0])
+                sizes = [shape_bytes(comp.types[o]) for o in op_names
+                         if o in comp.types]
+                upd = min(sizes) if sizes else shape_bytes(ins.type_str)
+                totals.bytes += m * 2 * upd
+                note(m * 2 * upd, ins)
+                continue
+            # memory boundary accounting: result + operands
+            b = shape_bytes(ins.type_str)
+            for op_name in _OPERAND_RE.findall(
+                    ins.rest.split("), ")[0] if "), " in ins.rest
+                    else ins.rest):
+                t = comp.types.get(op_name)
+                if t:
+                    b += shape_bytes(t)
+            totals.bytes += m * b
+            note(m * b, ins)
+    if collect_top:
+        totals.top_bytes.sort(key=lambda r: -r[0])
+        totals.top_bytes = totals.top_bytes[:collect_top]
+    return totals

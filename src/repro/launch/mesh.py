@@ -1,0 +1,24 @@
+"""Production mesh definitions.
+
+`make_production_mesh` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+`XLA_FLAGS=--xla_force_host_platform_device_count=512` before any jax
+import, and everything else must see the single real device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) data×model single pod (256 chips) or (2, 16, 16)
+    pod×data×model across two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host devices for tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,284 @@
+"""Input specs for every (arch × shape) cell: ShapeDtypeStruct stand-ins
+plus their shardings — weak-type-correct, shardable, no device allocation.
+
+`build_cell(cfg, shape_name, mesh, rcfg)` returns a `Cell` holding the
+function to lower and its (args, in_shardings, out_shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig, ShapeSpec
+from repro.dist import sharding as shd
+from repro.models import init_decode_cache, lm_decode_step, lm_prefill
+from repro.models.encdec import init_encdec_cache
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any          # None → let XLA choose
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _tree_named(mesh: Mesh, specs) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain_fn(mesh: Mesh, rcfg: RunConfig):
+    """The between-blocks residual-stream constraint (SP when enabled)."""
+    spec = shd.residual_spec(mesh, rcfg.sequence_parallel)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, spec)
+    return constrain
+
+
+# --------------------------------------------------------------------------
+# Batch specs per family
+# --------------------------------------------------------------------------
+
+def batch_structs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh
+                  ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    B, S = shape.global_batch, shape.seq_len
+    dp = shd.data_axes(mesh)
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    shards = {"tokens": _named(mesh, P(dp, None))}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = sds(
+            (B, cfg.vision.n_patches, cfg.vision.patch_embed_dim),
+            jnp.float32)
+        shards["patch_embeds"] = _named(mesh, P(dp, None, None))
+    if cfg.family == "audio":
+        enc_len = max(S // cfg.encoder.subsample, 8)
+        batch = {"frames": sds((B, enc_len, cfg.d_model), jnp.float32),
+                 "tokens": sds((B, S), jnp.int32)}
+        shards = {"frames": _named(mesh, P(dp, None, None)),
+                  "tokens": _named(mesh, P(dp, None))}
+    return batch, shards
+
+
+# --------------------------------------------------------------------------
+# State / cache sharding trees
+# --------------------------------------------------------------------------
+
+def state_shardings(state_shapes, mesh: Mesh) -> Any:
+    params_spec = shd.param_specs(state_shapes["params"], mesh)
+    mu_spec = shd.moment_specs(state_shapes["params"], mesh)
+    return {
+        "params": _tree_named(mesh, params_spec),
+        "opt": {
+            "mu": _tree_named(mesh, mu_spec),
+            "nu": _tree_named(mesh, mu_spec),
+            "count": _named(mesh, P()),
+        },
+        "step": _named(mesh, P()),
+    }
+
+
+def cache_shardings(cache_shapes, cfg: ArchConfig, mesh: Mesh,
+                    batch: int, how: str = "auto") -> Any:
+    dp = shd.data_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = int(np.prod([sizes[a] for a in dp]))
+    model = sizes.get("model", 1)
+    batch_ok = batch % dp_size == 0 and batch >= dp_size
+    heads_ok = cfg.n_kv_heads and cfg.n_kv_heads % model == 0
+    if how == "heads":
+        heads_ok = bool(cfg.n_kv_heads)   # force (uneven → XLA pads)
+    elif how == "seq":
+        heads_ok = False
+
+    def leaf_spec(path_s: str, leaf) -> P:
+        nd = len(leaf.shape)
+        if "'rk'" in path_s or "'rv'" in path_s:
+            # replicated append ring (small)
+            return P(None, dp, None, None, None) if batch_ok \
+                else P(*([None] * nd))
+        if "'k'" in path_s or "'v'" in path_s:
+            # (rep|L, B, Hkv, S, dh)
+            if batch_ok and heads_ok:
+                return P(None, dp, "model", None, None)
+            if batch_ok:
+                return P(None, dp, None, "model", None)
+            # batch=1 long-context: shard the sequence over everything
+            return P(None, None, None, dp + ("model",), None)
+        if "conv" in path_s:
+            # (rep, B, K-1, Cd)
+            return P(None, dp, None, "model") if (nd == 4 and batch_ok) \
+                else P(*([None] * nd))
+        if "state" in path_s:
+            # (rep, B, H, N, P)
+            from repro.models.ssm import ssm_dims
+            H = ssm_dims(cfg)[1] if cfg.ssm else 0
+            h_ok = H and H % model == 0
+            spec = [None] * nd
+            if nd >= 2 and batch_ok:
+                spec[1] = dp
+            if nd >= 3 and h_ok:
+                spec[2] = "model"
+            return P(*spec)
+        return P(*([None] * len(leaf.shape)))
+
+    from jax.tree_util import tree_flatten_with_path, keystr
+    leaves, treedef = tree_flatten_with_path(cache_shapes)
+    out = [_named(mesh, leaf_spec(keystr(path), leaf))
+           for path, leaf in leaves]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Cell builders
+# --------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+               rcfg: Optional[RunConfig] = None) -> Cell:
+    shape = cfg.shape(shape_name)
+    rcfg = rcfg or RunConfig(kernels="xla")
+    # Few-head archs run attention context-parallel: q blocks must tile the
+    # sequence exactly model_size ways (mp_split boundary = Sq / model).
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    heads_ok = cfg.n_kv_heads and cfg.n_kv_heads % model_size == 0
+    if not heads_ok and cfg.n_heads and shape.kind != "decode":
+        bq = max(shape.seq_len // model_size, 128)
+        rcfg = dataclasses.replace(
+            rcfg, attn_chunk_q=min(rcfg.attn_chunk_q, bq))
+    con = constrain_fn(mesh, rcfg)
+    # install activation sharding hints for this (arch, mesh)
+    ssm_heads = 0
+    if cfg.ssm is not None and rcfg.ssm_head_tp:
+        from repro.models.ssm import ssm_dims
+        ssm_heads = ssm_dims(cfg)[1]
+    shd.set_hint_fn(shd.make_hint_fn(mesh, cfg.n_kv_heads,
+                                     rcfg.sequence_parallel,
+                                     ssm_heads=ssm_heads))
+    shd.set_moe_mesh(mesh if rcfg.moe_shard_map else None)
+
+    if shape.kind == "train":
+        return _train_cell(cfg, shape, mesh, rcfg, con)
+    if shape.kind == "prefill":
+        return _prefill_cell(cfg, shape, mesh, rcfg, con)
+    return _decode_cell(cfg, shape, mesh, rcfg)
+
+
+def _train_cell(cfg, shape, mesh, rcfg, con) -> Cell:
+    key = jax.random.PRNGKey(0)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(key, cfg))
+    st_sh = state_shardings(state_shapes, mesh)
+    batch, batch_sh = batch_structs(cfg, shape, mesh)
+    step = make_train_step(cfg, rcfg, constrain=con)
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=step,
+        args=(state_shapes, batch),
+        in_shardings=(st_sh, batch_sh),
+        out_shardings=(st_sh, None),
+        donate_argnums=(0,),
+    )
+
+
+def _serving_params(cfg):
+    """Serving cells hold bf16 parameters (inference-cast copy)."""
+    key = jax.random.PRNGKey(0)
+    from repro.train.train_step import init_fn_for
+    shapes = jax.eval_shape(lambda: init_fn_for(cfg)(key, cfg))
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        shapes)
+
+
+def _prefill_cell(cfg, shape, mesh, rcfg, con) -> Cell:
+    params_shapes = _serving_params(cfg)
+    p_sh = _tree_named(mesh, shd.param_specs(params_shapes, mesh))
+    batch, batch_sh = batch_structs(cfg, shape, mesh)
+    prefill = make_prefill_step(cfg, rcfg, max_len=shape.seq_len)
+
+    if cfg.family == "audio":
+        fn = lambda params, frames, tokens: prefill(params, frames, tokens)
+        args = (params_shapes, batch["frames"], batch["tokens"])
+        in_sh = (p_sh, batch_sh["frames"], batch_sh["tokens"])
+    elif cfg.family == "vlm":
+        fn = lambda params, tokens, pe: prefill(params, tokens,
+                                                patch_embeds=pe)
+        args = (params_shapes, batch["tokens"], batch["patch_embeds"])
+        in_sh = (p_sh, batch_sh["tokens"], batch_sh["patch_embeds"])
+    else:
+        fn = lambda params, tokens: prefill(params, tokens)
+        args = (params_shapes, batch["tokens"])
+        in_sh = (p_sh, batch_sh["tokens"])
+    return Cell(name=f"{cfg.name}:{shape.name}", fn=fn, args=args,
+                in_shardings=in_sh, out_shardings=None)
+
+
+def _decode_cell(cfg, shape, mesh, rcfg) -> Cell:
+    key = jax.random.PRNGKey(0)
+    B, S = shape.global_batch, shape.seq_len
+    dp = shd.data_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = int(np.prod([sizes[a] for a in dp]))
+    batch_ok = B % dp_size == 0 and B >= dp_size
+    tok_spec = P(dp, None) if batch_ok else P(None, None)
+
+    params_shapes = _serving_params(cfg)
+    p_sh = _tree_named(mesh, shd.param_specs(params_shapes, mesh))
+    step = make_decode_step(cfg, rcfg)
+    tokens = sds((B, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+
+    if cfg.family == "audio":
+        enc_len = max(S // cfg.encoder.subsample, 8)
+        caches = jax.eval_shape(
+            lambda: init_encdec_cache(B, S, cfg))
+        cross = jax.eval_shape(lambda: (
+            jnp.zeros((cfg.n_layers, B, cfg.n_kv_heads, enc_len,
+                       cfg.resolved_head_dim), jnp.bfloat16),
+            jnp.zeros((cfg.n_layers, B, cfg.n_kv_heads, enc_len,
+                       cfg.resolved_head_dim), jnp.bfloat16)))
+        c_sh = cache_shardings(caches, cfg, mesh, B)
+        x_spec = P(None, dp, None, None, None) if batch_ok \
+            else P(None, None, None, dp + ("model",), None)
+        cross_sh = (_named(mesh, x_spec), _named(mesh, x_spec))
+        fn = step
+        args = (params_shapes, caches, cross, tokens, pos)
+        in_sh = (p_sh, c_sh, cross_sh, _named(mesh, tok_spec),
+                 _named(mesh, P()))
+        out_sh = (None, c_sh)
+    else:
+        caches = jax.eval_shape(
+            lambda: init_decode_cache(B, S, cfg, ring=rcfg.decode_ring))
+        c_sh = cache_shardings(caches, cfg, mesh, B,
+                               how=rcfg.decode_kv_shard)
+        fn = step
+        args = (params_shapes, caches, tokens, pos)
+        in_sh = (p_sh, c_sh, _named(mesh, tok_spec), _named(mesh, P()))
+        out_sh = (None, c_sh)
+    return Cell(name=f"{cfg.name}:{shape.name}", fn=fn, args=args,
+                in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=(1,))

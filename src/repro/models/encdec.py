@@ -1,0 +1,188 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The speech frontend is a stub: the encoder consumes precomputed frame
+embeddings (B, S_enc, d) from `input_specs()`.  Encoder = bidirectional
+attention blocks; decoder = causal self-attention + cross-attention to the
+encoder output + FFN.  Both stacks scan over layers.
+
+Decode: self-attn KV cache + cross-attn K/V precomputed once per session
+(`encdec_prepare_cross`).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from .common import (Params, dense, embed, embedding_init, fold_keys,
+                     rmsnorm, rmsnorm_init, unembed, dense_init)
+from .attention import (attention_decode_step, attention_forward, cross_kv,
+                        init_attention)
+from .ffn import ffn_forward, init_ffn
+
+
+def _init_enc_layer(key, cfg: ArchConfig) -> Params:
+    ka, kf, _, _ = fold_keys(key, "attn", "ffn", "x", "y")
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": init_attention(ka, cfg),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "ffn": init_ffn(kf, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig) -> Params:
+    ka, kc, kf, _ = fold_keys(key, "self", "cross", "ffn", "y")
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "self_attn": init_attention(ka, cfg),
+        "ln_cross": rmsnorm_init(cfg.d_model),
+        "cross_attn": init_attention(kc, cfg),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "ffn": init_ffn(kf, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig) -> Params:
+    ke, kd, kw, kh = fold_keys(key, "enc", "dec", "embed", "head")
+    enc_keys = jax.random.split(ke, cfg.encoder.n_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": embedding_init(kw, cfg.padded_vocab, cfg.d_model),
+        "enc_layers": jax.vmap(
+            lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(
+            lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": rmsnorm_init(cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.padded_vocab,
+                              stddev=0.02),
+    }
+
+
+def encode(p: Params, frames: jax.Array, cfg: ArchConfig,
+           rcfg: RunConfig) -> jax.Array:
+    """frames (B, S_enc, d_model) — precomputed embeddings (stub)."""
+
+    def body(h, lp):
+        a = attention_forward(lp["attn"], rmsnorm(lp["ln1"], h), cfg, rcfg,
+                              window=0, causal=False)
+        h = h + a
+        f = ffn_forward(lp["ffn"], rmsnorm(lp["ln2"], h), cfg.act)
+        return h + f, None
+
+    if rcfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, frames, p["enc_layers"])
+    return rmsnorm(p["enc_norm"], h)
+
+
+def decode_stack(p: Params, x: jax.Array, enc_out: jax.Array,
+                 cfg: ArchConfig, rcfg: RunConfig) -> jax.Array:
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        a = attention_forward(lp["self_attn"], rmsnorm(lp["ln1"], h), cfg,
+                              rcfg, window=0, positions=positions)
+        h = h + a
+        ckv = cross_kv(lp["cross_attn"], enc_out, cfg, rcfg)
+        c = attention_forward(lp["cross_attn"], rmsnorm(lp["ln_cross"], h),
+                              cfg, rcfg, window=0, kv_override=ckv)
+        h = h + c
+        f = ffn_forward(lp["ffn"], rmsnorm(lp["ln2"], h), cfg.act)
+        return h + f, None
+
+    if rcfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, x, p["dec_layers"])
+    return rmsnorm(p["final_norm"], h)
+
+
+def _mask_pad_vocab(logits: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+    return logits
+
+
+def encdec_forward(p: Params, frames: jax.Array, tokens: jax.Array,
+                   cfg: ArchConfig, rcfg: RunConfig) -> jax.Array:
+    compute = jnp.bfloat16 if rcfg.dtype == "bfloat16" else jnp.float32
+    enc_out = encode(p, frames, cfg, rcfg)
+    x = embed(p["embed"], tokens, compute)
+    h = decode_stack(p, x, enc_out, cfg, rcfg)
+    return _mask_pad_vocab(
+        dense(p["lm_head"], h, compute).astype(jnp.float32), cfg)
+
+
+def encdec_loss(p: Params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+                rcfg: RunConfig, constrain=None
+                ) -> Tuple[jax.Array, Dict]:
+    logits = encdec_forward(p, batch["frames"], batch["tokens"], cfg, rcfg)
+    targets = batch["tokens"][:, 1:]
+    lg = logits[:, :-1]
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - picked)
+    return loss, {"loss": loss, "aux_loss": jnp.zeros(())}
+
+
+# --------------------------------------------------------------------------
+# Decode (one token at a time) — self-attn cache + precomputed cross K/V
+# --------------------------------------------------------------------------
+
+def encdec_prepare_cross(p: Params, frames: jax.Array, cfg: ArchConfig,
+                         rcfg: RunConfig) -> Tuple[jax.Array, jax.Array]:
+    """Encoder pass + per-layer cross K/V (L, B, Hkv, S_enc, dh)."""
+    enc_out = encode(p, frames, cfg, rcfg)
+
+    def per_layer(lp):
+        k, v = cross_kv(lp["cross_attn"], enc_out, cfg, rcfg)
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(p["dec_layers"])
+    return ks, vs
+
+
+def init_encdec_cache(batch: int, max_len: int, cfg: ArchConfig,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    dh = cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, cfg.n_kv_heads, max_len, dh), dtype),
+        "v": jnp.zeros((L, batch, cfg.n_kv_heads, max_len, dh), dtype),
+    }
+
+
+def encdec_decode_step(p: Params, cache: Dict[str, jax.Array],
+                       cross: Tuple[jax.Array, jax.Array],
+                       tokens: jax.Array, pos: jax.Array, cfg: ArchConfig,
+                       rcfg: RunConfig
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    compute = jnp.bfloat16 if rcfg.dtype == "bfloat16" else jnp.float32
+    x = embed(p["embed"], tokens, compute)
+    cross_k, cross_v = cross
+
+    def body(h, inp):
+        lp, ck, cv, xk, xv = inp
+        a, nk, nv = attention_decode_step(
+            lp["self_attn"], rmsnorm(lp["ln1"], h), ck, cv, pos, cfg, rcfg,
+            window=0)
+        h = h + a
+        c = attention_forward(lp["cross_attn"], rmsnorm(lp["ln_cross"], h),
+                              cfg, rcfg, window=0, kv_override=(xk, xv),
+                              causal=False)
+        h = h + c
+        f = ffn_forward(lp["ffn"], rmsnorm(lp["ln2"], h), cfg.act)
+        return h + f, (nk, nv)
+
+    h, (nks, nvs) = jax.lax.scan(
+        body, x, (p["dec_layers"], cache["k"], cache["v"],
+                  cross_k, cross_v))
+    h = rmsnorm(p["final_norm"], h)
+    logits = _mask_pad_vocab(
+        dense(p["lm_head"], h, compute).astype(jnp.float32), cfg)[:, 0]
+    return logits, {"k": nks, "v": nvs}

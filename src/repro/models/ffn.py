@@ -1,0 +1,31 @@
+"""Gated-linear-unit FFN (SwiGLU / GeGLU)."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.dist.sharding import hint
+from .common import Params, activate, dense, dense_init, fold_keys
+
+
+def init_ffn(key, d_model: int, d_ff: int) -> Params:
+    kg, ku, kd = fold_keys(key, "gate", "up", "down")
+    return {
+        "w_gate": dense_init(kg, d_model, d_ff),
+        "w_up": dense_init(ku, d_model, d_ff),
+        "w_down": dense_init(kd, d_ff, d_model,
+                             stddev=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def ffn_forward(p: Params, x: jax.Array, act: str = "silu",
+                compute_dtype=jnp.bfloat16) -> jax.Array:
+    g = activate(hint("ffn_hidden", dense(p["w_gate"], x, compute_dtype)),
+                 act)
+    u = hint("ffn_hidden", dense(p["w_up"], x, compute_dtype))
+    return dense(p["w_down"], g * u, compute_dtype)

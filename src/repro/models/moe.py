@@ -1,0 +1,223 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+Dispatch is the `mp_split` + `mp_dist` story (paper §2.2/§3.4) applied to
+tokens: the router splits the token stream along expert boundaries
+(mp_split ≡ grouping by expert id via one argsort) and distributes the
+groups to per-expert buffers (mp_dist ≡ scatter into the (E, C, d)
+capacity buffer) that the batched expert GEMMs consume.
+
+Two execution modes:
+ * plain (single-device smoke / tests): everything local;
+ * `shard_map` over ('pod','data') with expert weights TP-sharded over
+   'model' (see dist.sharding): the sort/scatter stays *local* to each
+   data shard — no global argsort collectives — and one psum over 'model'
+   finishes the expert contraction (Megatron-style).
+
+Top-k routing with capacity factor; overflowed tokens are dropped
+(contribution zero) and counted in the aux metrics; a Switch-style load
+balancing loss is returned.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MoEConfig, RunConfig
+from .common import Params, activate, dense, dense_init, fold_keys, \
+    truncated_normal
+from .ffn import ffn_forward, init_ffn
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    mc = cfg.moe
+    d = cfg.d_model
+    f = mc.d_ff_expert
+    kr, k1, k2, k3, ks, kg = fold_keys(key, "router", "w1", "w2", "w3",
+                                       "shared", "shared_gate")
+    p: Params = {
+        "router": dense_init(kr, d, mc.n_experts, stddev=0.02),
+        # stacked expert weights (E, d, f) / (E, f, d)
+        "w_gate": truncated_normal(k1, (mc.n_experts, d, f),
+                                   1.0 / math.sqrt(d)),
+        "w_up": truncated_normal(k3, (mc.n_experts, d, f),
+                                 1.0 / math.sqrt(d)),
+        "w_down": truncated_normal(k2, (mc.n_experts, f, d),
+                                   1.0 / math.sqrt(f)),
+    }
+    if mc.n_shared_experts:
+        p["shared"] = init_ffn(ks, d, mc.d_ff_shared)
+        p["shared_gate"] = dense_init(kg, d, 1, stddev=0.02)
+    return p
+
+
+def _capacity(tokens: int, mc: MoEConfig) -> int:
+    cap = int(mc.capacity_factor * tokens * mc.top_k / mc.n_experts)
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_dispatch_compute(p: Params, x2: jax.Array, mc: MoEConfig,
+                         act: str, compute_dtype,
+                         psum_axis: Optional[str] = None,
+                         reduce_mode: str = "psum",
+                         comm_dtype=None,
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Core routed-expert computation over flat tokens x2 (T, d).
+
+    Returns (y (T, d), aux_loss scalar, dropped fraction scalar).
+    When called inside shard_map, `psum_axis` names the TP axis to reduce
+    the expert contraction over ('model').  `reduce_mode="scatter"` swaps
+    the full psum of the (E, C, d) expert output for a reduce-scatter
+    over d + a (T, d/TP) combine + final all-gather — TP× less wire
+    traffic on the big buffer (beyond-paper §Perf optimization).
+    `comm_dtype` — cast the reduction payload (e.g. bf16 halves bytes).
+    """
+    T, d = x2.shape
+    E, k = mc.n_experts, mc.top_k
+    C = _capacity(T, mc)
+
+    logits = dense(p["router"], x2, compute_dtype).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)         # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- mp_split: group token-expert pairs by expert id (argsort) ----
+    flat_e = expert_idx.reshape(-1)                         # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_s = flat_e[order]
+    t_s = flat_t[order]
+    g_s = flat_g[order]
+    # rank within expert group = position - first occurrence of the id
+    first = jnp.searchsorted(e_s, e_s, side="left")
+    rank = jnp.arange(T * k) - first
+    keep = rank < C
+    slot = jnp.where(keep, e_s * C + rank, E * C)           # E*C = trash row
+
+    # ---- mp_dist: scatter into per-expert capacity buffers ----
+    xb = x2.astype(compute_dtype)[t_s]                      # (T*k, d)
+    xb = jnp.where(keep[:, None], xb, 0)
+    buf = jnp.zeros((E * C + 1, d), compute_dtype).at[slot].add(xb)
+    buf = buf[:-1].reshape(E, C, d)
+
+    # ---- batched expert GEMMs (TP over f when sharded) ----
+    wg = p["w_gate"].astype(compute_dtype)
+    wu = p["w_up"].astype(compute_dtype)
+    wd = p["w_down"].astype(compute_dtype)
+    h = activate(jnp.einsum("ecd,edf->ecf", buf, wg), act) * \
+        jnp.einsum("ecd,edf->ecf", buf, wu)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd)             # (E, C, d)
+    if comm_dtype is not None:
+        out_buf = out_buf.astype(comm_dtype)
+
+    gates = g_s[:, None].astype(compute_dtype)
+    if psum_axis is not None and reduce_mode == "combine_first":
+        # The token combine (gather + gate-weight + scatter-add) is LINEAR
+        # in the expert outputs, so it commutes with the TP reduction:
+        # combine the PARTIAL (f-shard) expert outputs into (T, d) first,
+        # then psum — (E·C)/T ≈ capacity_factor·top_k× less wire traffic,
+        # and the backward transpose shrinks identically.
+        out_flat = out_buf.astype(compute_dtype).reshape(E * C, d)
+        yb = out_flat[jnp.clip(slot, 0, E * C - 1)]
+        yb = jnp.where(keep[:, None], yb, 0) * gates
+        y = jnp.zeros((T, d), compute_dtype).at[t_s].add(yb)
+        y = jax.lax.psum(y, psum_axis)
+    elif psum_axis is not None and reduce_mode == "scatter":
+        # reduce-scatter the d dim, combine on the shard, all-gather once
+        out_buf = jax.lax.psum_scatter(out_buf, psum_axis,
+                                       scatter_dimension=2, tiled=True)
+        d_loc = out_buf.shape[-1]
+        out_flat = out_buf.astype(compute_dtype).reshape(E * C, d_loc)
+        yb = out_flat[jnp.clip(slot, 0, E * C - 1)]
+        yb = jnp.where(keep[:, None], yb, 0) * gates
+        y_loc = jnp.zeros((T, d_loc), compute_dtype).at[t_s].add(yb)
+        y = jax.lax.all_gather(y_loc, psum_axis, axis=1, tiled=True)
+    else:
+        if psum_axis is not None:
+            out_buf = jax.lax.psum(out_buf, psum_axis)
+        out_flat = out_buf.astype(compute_dtype).reshape(E * C, d)
+        yb = out_flat[jnp.clip(slot, 0, E * C - 1)]
+        yb = jnp.where(keep[:, None], yb, 0) * gates
+        y = jnp.zeros((T, d), compute_dtype).at[t_s].add(yb)
+
+    # ---- aux: Switch load-balance loss + drop accounting ----
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    top1 = jnp.argmax(logits, axis=-1)
+    ce = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / (T * k)
+    return y, aux, dropped
+
+
+def _shard_map_dispatch(p: Params, x2: jax.Array, mc: MoEConfig, act: str,
+                        compute, mesh, rcfg=None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """mp_split/mp_dist dispatch inside shard_map: each data shard sorts
+    and scatters ITS tokens locally (no global argsort collectives);
+    expert GEMMs are TP-sharded over 'model' with one reduction."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import data_axes
+
+    dp = data_axes(mesh)
+    has_model = "model" in mesh.axis_names
+    reduce_mode = getattr(rcfg, "moe_reduce", "psum")
+    comm_dtype = jnp.bfloat16 \
+        if getattr(rcfg, "moe_comm_dtype", "float32") == "bfloat16" else None
+
+    def local(x2l, router_k, wg, wu, wd):
+        pl = {"router": {"kernel": router_k},
+              "w_gate": wg, "w_up": wu, "w_down": wd}
+        y, aux, _dropped = moe_dispatch_compute(
+            pl, x2l, mc, act, compute,
+            psum_axis="model" if has_model else None,
+            reduce_mode=reduce_mode, comm_dtype=comm_dtype)
+        aux = jax.lax.pmean(aux, dp)
+        return y, aux
+
+    in_specs = (P(dp, None), P(None, None),
+                P(None, None, "model"), P(None, None, "model"),
+                P(None, "model", None))
+    out_specs = (P(dp, None), P())
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return fn(x2, p["router"]["kernel"], p["w_gate"], p["w_up"],
+              p["w_down"])
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: ArchConfig, rcfg: RunConfig,
+                psum_axis: Optional[str] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) → (y (B, S, d), aux loss scalar)."""
+    from repro.dist.sharding import data_axes, moe_mesh, zip_axis
+
+    mc = cfg.moe
+    B, S, d = x.shape
+    compute = jnp.bfloat16 if rcfg.dtype == "bfloat16" else jnp.float32
+    x2 = x.reshape(B * S, d)
+
+    mesh = moe_mesh() if rcfg.moe_shard_map else None
+    if mesh is not None:
+        dp_size = int(np.prod([dict(zip_axis(mesh))[a]
+                               for a in data_axes(mesh)]))
+        if B % dp_size != 0:
+            mesh = None                 # tiny/indivisible batch: local path
+    if mesh is not None:
+        y2, aux = _shard_map_dispatch(p, x2, mc, cfg.act, compute, mesh,
+                                      rcfg=rcfg)
+    else:
+        y2, aux, _dropped = moe_dispatch_compute(
+            p, x2, mc, cfg.act, compute, psum_axis=psum_axis)
+    y = y2.reshape(B, S, d)
+    if mc.n_shared_experts:
+        shared = ffn_forward(p["shared"], x, cfg.act, compute)
+        sg = jax.nn.sigmoid(
+            dense(p["shared_gate"], x, compute).astype(jnp.float32))
+        y = y + (sg.astype(compute) * shared)
+    return y, aux * mc.router_aux_weight

@@ -1,0 +1,190 @@
+"""Mamba-2 selective-SSM layer (SSD core) — full sequence + decode step.
+
+Layer anatomy per [arXiv:2405.21060]:
+  in_proj → [z | x | B | C | dt], causal depthwise conv over [x|B|C],
+  dt = softplus(dt + dt_bias), A = -exp(A_log),
+  y = SSD(x, dt, A, B, C) + D⊙x, y = RMSNormGated(y, z), out_proj.
+
+Full-sequence path uses the SSD kernel (Pallas) or its chunked-einsum
+oracle (XLA path).  Decode keeps a (conv_state, ssm_state) recurrent cache —
+O(1) per token, which is why mamba2/hymba run the `long_500k` cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig, SSMConfig
+from repro.kernels.ssd.ops import ssd as ssd_op
+from .common import Params, dense, dense_init, fold_keys, rmsnorm, \
+    rmsnorm_init, truncated_normal
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int, int, int]:
+    """(d_inner, H, P, G, N)."""
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    P = sc.head_dim
+    H = sc.n_heads or d_inner // P
+    return d_inner, H, P, sc.n_groups, sc.d_state
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    d_inner, H, P, G, N = ssm_dims(cfg)
+    return d_inner + 2 * G * N
+
+
+def init_ssm(key, cfg: ArchConfig) -> Params:
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, P, G, N = ssm_dims(cfg)
+    d_conv = conv_dim(cfg)
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    kin, kout, kconv, kdt = fold_keys(key, "in", "out", "conv", "dt")
+    dt = jnp.exp(jax.random.uniform(kdt, (H,)) *
+                 (math.log(sc.dt_max) - math.log(sc.dt_min)) +
+                 math.log(sc.dt_min))
+    return {
+        "in_proj": dense_init(kin, d, d_in_proj),
+        "conv_w": truncated_normal(kconv, (sc.conv_kernel, d_conv),
+                                   1.0 / math.sqrt(sc.conv_kernel)),
+        "conv_b": jnp.zeros((d_conv,)),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,)),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),   # inverse softplus
+        "gate_norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(kout, d_inner, d,
+                               stddev=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: xbc (B, S, Cd); w (K, Cd)."""
+    K = w.shape[0]
+    out = xbc * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i or None]
+        shifted = shifted[:, :xbc.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(proj: jax.Array, cfg: ArchConfig):
+    d_inner, H, P, G, N = ssm_dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + conv_dim(cfg)], axis=-1)
+    return z, xbc, dt
+
+
+def ssm_forward(p: Params, x: jax.Array, cfg: ArchConfig,
+                rcfg: RunConfig, return_state: bool = False):
+    """x (B, S, d_model) → (B, S, d_model) [, decode cache]."""
+    sc = cfg.ssm
+    Bb, S, _ = x.shape
+    d_inner, H, P, G, N = ssm_dims(cfg)
+    compute = jnp.bfloat16 if rcfg.dtype == "bfloat16" else jnp.float32
+
+    proj = dense(p["in_proj"], x, compute)
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg)
+    xbc_raw = xbc_raw.astype(jnp.float32)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, Bs, Cs = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    # kernel layouts (TP: SSD heads over 'model' via sharding hints)
+    from repro.dist.sharding import hint
+    xh = hint("ssm_x4", xs.reshape(Bb, S, H, P).transpose(0, 2, 1, 3))
+    dth = hint("ssm_dt3", dt.transpose(0, 2, 1))              # (B,H,S)
+    Bg = Bs.reshape(Bb, S, G, N).transpose(0, 2, 1, 3)        # (B,G,S,N)
+    Cg = Cs.reshape(Bb, S, G, N).transpose(0, 2, 1, 3)
+
+    # pad sequence to the chunk size (legalizer rule)
+    L = rcfg.ssd_chunk or sc.chunk
+    pad = (-S) % L
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dth = jnp.pad(dth, ((0, 0), (0, 0), (0, pad)))
+        Bg = jnp.pad(Bg, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Cg = jnp.pad(Cg, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    backend = "pallas" if rcfg.kernels == "pallas" else "xla"
+    if rcfg.ssd_compute_dtype == "bfloat16":
+        xh = xh.astype(jnp.bfloat16)
+        Bg = Bg.astype(jnp.bfloat16)
+        Cg = Cg.astype(jnp.bfloat16)
+    res = ssd_op(xh, dth, A, p["D"], Bg, Cg,
+                 chunk=L, return_state=return_state, backend=backend)
+    y = res[0] if return_state else res
+    y = hint("ssm_x4", y)
+    y = y[:, :, :S].transpose(0, 2, 1, 3).reshape(Bb, S, d_inner)
+
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z.astype(jnp.float32)))
+    out = dense(p["out_proj"], y.astype(compute), compute)
+    if return_state:
+        # decode cache: final SSM state + last (K-1) raw conv inputs
+        K = sc.conv_kernel
+        tail = xbc_raw[:, max(S - (K - 1), 0):]
+        if S < K - 1:
+            tail = jnp.pad(tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        # Padded tail steps carry dt=0 (dth zero-padded) → exp(A·0)=1 and a
+        # zero input term, so the final state is exactly the state at S.
+        return out, {"conv": tail, "state": res[1]}
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode step — O(1) recurrent state
+# --------------------------------------------------------------------------
+
+def init_ssm_cache(batch: int, cfg: ArchConfig, dtype=jnp.float32
+                   ) -> Dict[str, jax.Array]:
+    sc = cfg.ssm
+    d_inner, H, P, G, N = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, sc.conv_kernel - 1, conv_dim(cfg)), dtype),
+        "state": jnp.zeros((batch, H, N, P), dtype),
+    }
+
+
+def ssm_decode_step(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                    cfg: ArchConfig, rcfg: RunConfig
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B, 1, d_model) → (y (B, 1, d_model), new cache)."""
+    sc = cfg.ssm
+    Bb = x.shape[0]
+    d_inner, H, P, G, N = ssm_dims(cfg)
+    compute = jnp.bfloat16 if rcfg.dtype == "bfloat16" else jnp.float32
+
+    proj = dense(p["in_proj"], x, compute)[:, 0]             # (B, dproj)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    # conv over (K-1 history + current)
+    hist = cache["conv"]                                      # (B,K-1,Cd)
+    wind = jnp.concatenate([hist, xbc.astype(jnp.float32)[:, None]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", wind, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = wind[:, 1:]
+
+    xs, Bs, Cs = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+
+    xh = xs.reshape(Bb, H, P)
+    hpg = H // G
+    Bh = jnp.repeat(Bs.reshape(Bb, G, N), hpg, axis=1)        # (B,H,N)
+    Ch = jnp.repeat(Cs.reshape(Bb, G, N), hpg, axis=1)
+
+    decay = jnp.exp(A[None] * dt)                             # (B,H)
+    h = cache["state"] * decay[..., None, None] + \
+        (dt[..., None, None] * Bh[..., :, None] * xh[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h) + p["D"][None, :, None] * xh
+    y = y.reshape(Bb, d_inner)
+
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z.astype(jnp.float32)))
+    out = dense(p["out_proj"], y.astype(compute)[:, None], compute)
+    return out, {"conv": new_conv, "state": h}

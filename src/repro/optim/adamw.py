@@ -1,0 +1,59 @@
+"""AdamW with decoupled weight decay, global-norm clipping, fp32 master
+moments.  Moments are ZeRO-1-sharded over the data axes by
+`dist.sharding.moment_specs` (the launcher passes the shardings; the math
+here is placement-agnostic)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree_util.tree_map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, 0.0))
+
+
+def adamw_update(grads, state, params, lr, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    if grad_clip > 0:
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+
+    b1c = 1.0 - b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - b2 ** count.astype(jnp.float32)
+
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+
+    def step(p, m, v):
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+        update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(step, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}, \
+        {"grad_norm": gnorm}

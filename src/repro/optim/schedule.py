@@ -1,0 +1,17 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup_steps: int = 100,
+                    total_steps: int = 10_000, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    # 1-indexed warmup so the very first update has a non-zero LR
+    warm = peak_lr * (step + 1.0) / jnp.maximum(warmup_steps, 1)
+    progress = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) *
+                     0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,2 @@
+from .serve_step import make_prefill_step, make_decode_step
+from .engine import ServeEngine, Request

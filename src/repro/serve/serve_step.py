@@ -1,0 +1,59 @@
+"""Serving steps: prefill and decode, the functions the decode/prefill
+dry-run cells lower.
+
+`make_decode_step(cfg, rcfg)` returns step(params, caches, tokens, pos) →
+(logits, caches) — one new token against a KV cache of the cell's
+seq_len.  This is the Manticore-style tightly-coupled DMA workload: pure
+KV streaming.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import (init_decode_cache, lm_decode_step, lm_prefill)
+from repro.models.encdec import (encdec_decode_step, encdec_prepare_cross,
+                                 init_encdec_cache)
+
+
+def make_prefill_step(cfg: ArchConfig, rcfg: RunConfig,
+                      max_len: Optional[int] = None) -> Callable:
+    if cfg.family == "audio":
+        def prefill(params, frames, tokens):
+            cross = encdec_prepare_cross(params, frames, cfg, rcfg)
+            return cross
+        return prefill
+
+    def prefill(params, tokens, patch_embeds=None):
+        return lm_prefill(params, tokens, cfg, rcfg, max_len=max_len,
+                          patch_embeds=patch_embeds)
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, rcfg: RunConfig) -> Callable:
+    if cfg.family == "audio":
+        def step(params, caches, cross, tokens, pos):
+            return encdec_decode_step(params, caches, cross, tokens, pos,
+                                      cfg, rcfg)
+        return step
+
+    def step(params, caches, tokens, pos):
+        return lm_decode_step(params, caches, tokens, pos, cfg, rcfg)
+    return step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key, logits: jax.Array,
+                       temperature: float = 1.0) -> jax.Array:
+    if temperature <= 0:
+        return greedy_sample(logits)
+    return jax.random.categorical(key, logits / temperature, axis=-1) \
+        .astype(jnp.int32)

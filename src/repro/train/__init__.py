@@ -1,0 +1,2 @@
+from .train_step import TrainState, make_train_step, init_train_state
+from .trainer import Trainer, TrainerConfig

@@ -1,0 +1,36 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600
+                     ) -> str:
+    """Run `code` in a subprocess with N fake host devices.
+
+    Multi-device tests must not pollute this process's jax device state
+    (smoke tests see 1 device), so they execute in a child interpreter.
+    Raises on failure with combined output.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["TF_CPP_MIN_LOG_LEVEL"] = "2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode}):\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_with_devices

@@ -1,0 +1,71 @@
+"""Area/timing model tests against the paper's published numbers."""
+
+from repro.core import analytics as A
+from repro.core.analytics import PortConfig
+from repro.core.descriptor import Protocol
+
+
+def test_32b_32ot_under_25kge():
+    """§1/§4.4: 'supporting 32 outstanding transfers keeps the engine area
+    below 25 kGE' in the base 32-b configuration."""
+    area = A.area_model(A.base_axi_ports(), aw=32, dw=32, nax=32).total
+    assert area < 25_000
+
+
+def test_400ge_per_outstanding():
+    """§4.4: 'growing by roughly 400 GE for each added buffer stage'."""
+    ge = A.ge_per_outstanding(A.base_axi_ports())
+    assert 300 < ge < 500
+
+
+def test_area_monotone_in_params():
+    base = A.area_model(A.base_axi_ports(), 32, 32, 2).total
+    assert A.area_model(A.base_axi_ports(), 64, 32, 2).total > base
+    assert A.area_model(A.base_axi_ports(), 32, 64, 2).total > base
+    assert A.area_model(A.base_axi_ports(), 32, 32, 4).total > base
+
+
+def test_protocol_contributions_ordering():
+    """AXI is the most expensive protocol to support (Table 4)."""
+    def area(proto):
+        return A.area_model([PortConfig(proto)], 32, 32, 2).total
+    assert area(Protocol.AXI4) > area(Protocol.AXI_LITE)
+    assert area(Protocol.AXI4) > area(Protocol.OBI)
+
+
+def test_decomposition_adds_up():
+    bd = A.area_model(A.pulp_cluster_ports(), 32, 32, 16)
+    parts = bd.as_dict()
+    total = parts.pop("total")
+    assert abs(sum(parts.values()) - total) < 1e-6
+
+
+def test_timing_simple_protocols_faster():
+    """Fig. 13: OBI/AXI-Lite run faster than AXI; multi-protocol slower."""
+    f_obi = A.max_frequency_ghz([PortConfig(Protocol.OBI)])
+    f_axi = A.max_frequency_ghz([PortConfig(Protocol.AXI4)])
+    f_multi = A.max_frequency_ghz(
+        [PortConfig(Protocol.AXI4), PortConfig(Protocol.OBI),
+         PortConfig(Protocol.TILELINK)])
+    assert f_obi > f_axi > f_multi
+
+
+def test_over_1ghz_at_12nm():
+    """§6: 'large high-performance iDMAEs running at over 1 GHz' — the
+    Manticore 512-b configuration."""
+    f = A.max_frequency_ghz(A.base_axi_ports(), aw=48, dw=512, nax=32)
+    assert f > 1.0
+
+
+def test_timing_degrades_with_width():
+    f32 = A.max_frequency_ghz(A.base_axi_ports(), dw=32)
+    f512 = A.max_frequency_ghz(A.base_axi_ports(), dw=512)
+    assert f32 > f512
+
+
+def test_latency_model_matches_simulator():
+    from repro.core import EngineConfig, SRAM, Transfer1D, simulate
+    for midends in (0, 1, 2):
+        cfg = EngineConfig(bus_width=8, num_midends=midends)
+        r = simulate([Transfer1D(0, 0, 64)], cfg, SRAM, SRAM)
+        assert r.first_read_req == A.latency_model(midends)

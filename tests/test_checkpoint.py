@@ -1,0 +1,107 @@
+"""Checkpoint engine tests: roundtrip, error-handler verbs, elasticity."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import ErrorPolicy
+from repro.dist import checkpoint as ckpt
+
+
+def tree():
+    return {
+        "a": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+        "b": [jnp.ones((5,), jnp.bfloat16), jnp.zeros((2, 2), jnp.int32)],
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    path = ckpt.save(t, str(tmp_path), step=7)
+    like = jax.eval_shape(lambda: tree())
+    out = ckpt.restore(path, like)
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_prune(tmp_path):
+    t = tree()
+    for s in (1, 2, 3, 4):
+        ckpt.save(t, str(tmp_path), step=s)
+    assert ckpt.latest(str(tmp_path)).step == 4
+    ckpt.prune(str(tmp_path), keep=2)
+    assert len(ckpt.list_checkpoints(str(tmp_path))) == 2
+
+
+def test_checksum_verification(tmp_path):
+    t = tree()
+    path = ckpt.save(t, str(tmp_path), step=1)
+    # corrupt the payload
+    payload = os.path.join(path, ckpt.PAYLOAD)
+    arrs = dict(np.load(payload))
+    key = sorted(arrs)[0]
+    arrs[key] = arrs[key] + 1
+    np.savez(payload.replace(".npz", ""), **arrs)
+    with pytest.raises(IOError, match="checksum"):
+        ckpt.restore(path, jax.eval_shape(lambda: tree()))
+
+
+class TestErrorVerbs:
+    def _flaky(self, fail_names, max_fails=1):
+        fails = {}
+
+        def hook(name):
+            if any(f in name for f in fail_names):
+                n = fails.get(name, 0)
+                if n < max_fails:
+                    fails[name] = n + 1
+                    raise IOError(f"injected write fault for {name}")
+        return hook
+
+    def test_replay_retries_and_succeeds(self, tmp_path):
+        t = tree()
+        path = ckpt.save(t, str(tmp_path), step=1,
+                         error_policy=ErrorPolicy(action="replay"),
+                         _fault_hook=self._flaky(["'w'"]))
+        out = ckpt.restore(path, jax.eval_shape(lambda: tree()))
+        assert np.array_equal(np.asarray(out["a"]["w"]),
+                              np.asarray(t["a"]["w"]))
+
+    def test_abort_raises(self, tmp_path):
+        with pytest.raises(IOError):
+            ckpt.save(tree(), str(tmp_path), step=1,
+                      error_policy=ErrorPolicy(action="abort"),
+                      _fault_hook=self._flaky(["'w'"], max_fails=99))
+
+    def test_continue_marks_partial(self, tmp_path):
+        path = ckpt.save(tree(), str(tmp_path), step=1,
+                         error_policy=ErrorPolicy(action="continue"),
+                         _fault_hook=self._flaky(["'w'"], max_fails=99))
+        infos = ckpt.list_checkpoints(str(tmp_path))
+        assert len(infos) == 1 and not infos[0].complete
+        # incomplete checkpoints are not eligible for restore-latest
+        assert ckpt.latest(str(tmp_path)) is None
+
+
+def test_elastic_restore_to_mesh(subproc):
+    """Save unsharded, restore onto a 2x2 mesh with NamedShardings."""
+    out = subproc("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile, os
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import checkpoint as ckpt
+        t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        d = tempfile.mkdtemp()
+        path = ckpt.save(t, d, step=1)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        sh = {"w": NamedSharding(mesh, P("data", "model"))}
+        out = ckpt.restore(path, jax.eval_shape(lambda: t), shardings=sh)
+        assert out["w"].sharding == sh["w"], out["w"].sharding
+        assert np.array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+        print("ELASTIC_OK")
+    """, n_devices=4)
+    assert "ELASTIC_OK" in out

@@ -1,0 +1,103 @@
+"""Legalizer unit + property tests (paper Fig. 4 invariants)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PAGE_SIZE, BackendOptions, Protocol, Transfer1D,
+                        check_legal, contiguous_coverage, legal_latency,
+                        legalize, legalize_tile, total_bytes)
+
+PROTOS = [Protocol.AXI4, Protocol.AXI_LITE, Protocol.AXI_STREAM,
+          Protocol.OBI, Protocol.TILELINK]
+
+
+def mk(src, dst, length, sp=Protocol.AXI4, dp=Protocol.AXI4, **opts):
+    return Transfer1D(src, dst, length, sp, dp,
+                      options=BackendOptions(**opts) if opts
+                      else BackendOptions())
+
+
+class TestAxi:
+    def test_page_boundary_never_crossed(self):
+        t = mk(PAGE_SIZE - 100, 0, 400)
+        bursts = legalize(t, bus_width=8)
+        check_legal(bursts, 8)
+        assert len(bursts) >= 2
+
+    def test_burst_cap_256_beats(self):
+        t = mk(0, 0, 64 * 1024)
+        bursts = legalize(t, bus_width=8)
+        assert all(b.length <= 256 * 8 for b in bursts)
+
+    def test_dst_page_rule_also_applies(self):
+        t = mk(0, PAGE_SIZE - 64, 256)
+        bursts = legalize(t, bus_width=8)
+        check_legal(bursts, 8)
+
+    def test_user_burst_cap(self):
+        t = mk(0, 0, 4096, max_burst=64)
+        bursts = legalize(t, bus_width=8)
+        assert all(b.length <= 64 for b in bursts)
+
+
+class TestNoBurstProtocols:
+    @pytest.mark.parametrize("proto", [Protocol.OBI, Protocol.AXI_LITE])
+    def test_single_beats(self, proto):
+        t = mk(0, 0, 64, sp=proto, dp=proto)
+        bursts = legalize(t, bus_width=4)
+        assert all(b.length <= 4 for b in bursts)
+        assert len(bursts) == 16
+
+
+class TestTileLink:
+    def test_pow2_naturally_aligned(self):
+        t = mk(12, 12, 1000, sp=Protocol.TILELINK, dp=Protocol.TILELINK)
+        bursts = legalize(t, bus_width=8)
+        check_legal(bursts, 8)
+        for b in bursts:
+            assert b.length & (b.length - 1) == 0
+
+
+class TestZeroLength:
+    def test_zero_length_dropped(self):
+        assert legalize(mk(0, 0, 0)) == []
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    src=st.integers(0, 1 << 20),
+    dst=st.integers(0, 1 << 20),
+    length=st.integers(1, 64 * 1024),
+    sp=st.sampled_from(PROTOS),
+    dp=st.sampled_from(PROTOS),
+    bus=st.sampled_from([4, 8, 16, 64]),
+)
+def test_legalize_properties(src, dst, length, sp, dp, bus):
+    """For any transfer: bursts are legal, cover the exact byte range in
+    order, and preserve total length."""
+    t = Transfer1D(src, dst, length, sp, dp)
+    bursts = legalize(t, bus_width=bus)
+    check_legal(bursts, bus)
+    assert total_bytes(bursts) == length
+    assert contiguous_coverage(bursts)
+    assert bursts[0].src_addr == src and bursts[0].dst_addr == dst
+    assert bursts[-1].src_end == src + length
+
+
+@settings(max_examples=100, deadline=None)
+@given(rows=st.integers(1, 5000), cols=st.integers(1, 5000),
+       itemsize=st.sampled_from([1, 2, 4]))
+def test_tile_legalization(rows, cols, itemsize):
+    tr, tc = legalize_tile((rows, cols), itemsize)
+    from repro.core.legalizer import TPU_SUBLANES
+    assert tr % TPU_SUBLANES[itemsize] == 0
+    assert tc % 128 == 0
+    assert tr * tc * itemsize <= 64 * 1024 * 1024
+
+
+def test_latency_rule():
+    assert legal_latency(0) == 2
+    assert legal_latency(0, has_legalizer=False) == 1
+    assert legal_latency(1) == 3
+    assert legal_latency(2) == 4
+    assert legal_latency(1, tensor_nd_zero_latency=True) == 2

@@ -1,0 +1,95 @@
+"""Mid-end tests: tensor_nd / mp_split / mp_dist / rt_3D (paper §2.2)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (NdTransfer, RtConfig, TensorDim, Transfer1D,
+                        coalesce_nd, mp_dist, mp_dist_tree, mp_split,
+                        rt_schedule, split_and_distribute, tensor_nd,
+                        total_bytes)
+from repro.core.midend import no_boundary_crossing, preserves_bytes
+
+
+class TestTensorNd:
+    def test_dense_collapses_to_one(self):
+        nd = NdTransfer(0, 0, 64, (TensorDim(64, 64, 4),
+                                   TensorDim(256, 256, 8)))
+        out = tensor_nd(nd)
+        assert len(out) == 1 and out[0].length == 64 * 4 * 8
+
+    def test_strided_walk_order_and_addresses(self):
+        nd = NdTransfer(100, 200, 16, (TensorDim(32, 16, 3),))
+        out = tensor_nd(nd)
+        assert [t.src_addr for t in out] == [100, 132, 164]
+        assert [t.dst_addr for t in out] == [200, 216, 232]
+
+    def test_3d(self):
+        nd = NdTransfer(0, 0, 8, (TensorDim(16, 8, 2),
+                                  TensorDim(64, 16, 3)))
+        out = tensor_nd(nd)
+        assert len(out) == 6
+        assert total_bytes(out) == 8 * 2 * 3
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    inner=st.integers(1, 512),
+    dims=st.lists(
+        st.tuples(st.integers(1, 2048), st.integers(1, 2048),
+                  st.integers(1, 6)),
+        min_size=0, max_size=3),
+)
+def test_tensor_nd_preserves_bytes(inner, dims):
+    tdims = tuple(TensorDim(max(s1, inner), max(s2, inner), r)
+                  for s1, s2, r in dims)
+    nd = NdTransfer(0, 0, inner, tdims)
+    out = tensor_nd(nd)
+    assert preserves_bytes(nd, out)
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    src=st.integers(0, 1 << 16),
+    dst=st.integers(0, 1 << 16),
+    length=st.integers(1, 1 << 16),
+    boundary=st.sampled_from([64, 256, 1024, 4096]),
+    which=st.sampled_from(["src", "dst", "both"]),
+)
+def test_mp_split_properties(src, dst, length, boundary, which):
+    t = Transfer1D(src, dst, length)
+    out = mp_split(t, boundary, which=which)
+    assert total_bytes(out) == length
+    if which in ("dst", "both"):
+        assert no_boundary_crossing(out, boundary, "dst")
+    if which in ("src", "both"):
+        assert no_boundary_crossing(out, boundary, "src")
+
+
+class TestMpDist:
+    def test_address_scheme_exclusive_regions(self):
+        t = Transfer1D(0, 0, 4096)
+        ports = split_and_distribute(t, 4, 256)
+        for i, port in enumerate(ports):
+            for b in port:
+                assert (b.dst_addr // 256) % 4 == i
+
+    def test_tree_matches_flat(self):
+        t = Transfer1D(0, 128, 8192)
+        split = mp_split(t, 512, which="dst")
+        flat = mp_dist(split, 4, scheme="address", boundary=512)
+        tree = mp_dist_tree(split, 4, boundary=512)
+        assert flat == tree
+
+    def test_round_robin(self):
+        ts = [Transfer1D(i * 64, i * 64, 64) for i in range(10)]
+        ports = mp_dist(ts, 3, scheme="round_robin")
+        assert [len(p) for p in ports] == [4, 3, 3]
+
+
+def test_rt_schedule_periodicity():
+    nd = NdTransfer(0, 0, 64, (TensorDim(128, 64, 4),))
+    sched = rt_schedule(RtConfig(period=100, num_launches=5), nd,
+                        horizon=1000)
+    assert [t for t, _ in sched] == [0, 100, 200, 300, 400]
+    unbounded = rt_schedule(RtConfig(period=250), nd, horizon=1000)
+    assert len(unbounded) == 4

@@ -1,0 +1,105 @@
+"""System-level property tests (hypothesis) on framework invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EngineConfig, MemSystem, Transfer1D, simulate)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    frag=st.sampled_from([4, 16, 64, 256]),
+    nax_small=st.integers(1, 8),
+    extra=st.integers(1, 56),
+    latency=st.integers(1, 200),
+)
+def test_utilization_bounded_and_monotone_in_nax(frag, nax_small, extra,
+                                                 latency):
+    """0 < util <= 1, and more outstanding transactions never hurt."""
+    mem = MemSystem("m", latency=latency, outstanding=64)
+    ts = [Transfer1D(i * frag, i * frag, frag) for i in range(256)]
+    lo = simulate(ts, EngineConfig(bus_width=4, n_outstanding=nax_small),
+                  mem, mem).utilization
+    hi = simulate(ts, EngineConfig(bus_width=4,
+                                   n_outstanding=nax_small + extra),
+                  mem, mem).utilization
+    assert 0 < lo <= 1.0 + 1e-9
+    assert hi >= lo - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(latency=st.integers(1, 300))
+def test_latency_never_leaks_into_launch(latency):
+    """First read request is always exactly the §4.3 launch latency,
+    independent of memory depth."""
+    mem = MemSystem("m", latency=latency, outstanding=8)
+    r = simulate([Transfer1D(0, 0, 256)], EngineConfig(bus_width=8),
+                 mem, mem)
+    assert r.first_read_req == 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(8, 64),
+    e=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 2),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_moe_dispatch_conserves_tokens(t, e, k, seed):
+    """With ample capacity, the sort/scatter/gather dispatch is exact:
+    y == sum_k gate_k * expert_k(x) computed densely."""
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import moe_dispatch_compute
+    import math as m
+
+    d, f = 16, 32
+    rng = np.random.default_rng(seed)
+    mc = MoEConfig(n_experts=e, top_k=k, d_ff_expert=f,
+                   capacity_factor=float(e))      # dropless at these sizes
+    p = {
+        "router": {"kernel": jnp.asarray(
+            rng.standard_normal((d, e)) * 0.5, jnp.float32)},
+        "w_gate": jnp.asarray(rng.standard_normal((e, d, f)) / m.sqrt(d),
+                              jnp.float32),
+        "w_up": jnp.asarray(rng.standard_normal((e, d, f)) / m.sqrt(d),
+                            jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((e, f, d)) / m.sqrt(f),
+                              jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    y, aux, dropped = moe_dispatch_compute(p, x, mc, "silu", jnp.float32)
+    assert float(dropped) == 0.0
+
+    # dense reference
+    logits = x @ p["router"]["kernel"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv, idx = jax.lax.top_k(probs, k)
+    gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+    y_ref = np.zeros((t, d), np.float32)
+    for ti in range(t):
+        for kk in range(k):
+            ei = int(idx[ti, kk])
+            h = jax.nn.silu(x[ti] @ p["w_gate"][ei]) * \
+                (x[ti] @ p["w_up"][ei])
+            y_ref[ti] += float(gv[ti, kk]) * np.asarray(h @ p["w_down"][ei])
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 16),
+    rows=st.sampled_from([8, 64, 100]),
+    cols=st.sampled_from([128, 300]),
+)
+def test_init_prng_fabric_equivalence(seed, rows, cols):
+    """Init pseudo-protocol PRNG: RTL byte stream == Pallas kernel words,
+    for any seed and tile shape."""
+    from repro.core import InitPattern, init_stream
+    from repro.kernels.init_engine import prng_fill
+    words = prng_fill((rows, cols), seed, jnp.uint32, backend="pallas",
+                      interpret=True)
+    rtl = init_stream(InitPattern.PSEUDORANDOM, seed, 0, rows * cols * 4)
+    assert np.array_equal(
+        np.asarray(words).reshape(-1).view(np.uint8), rtl)

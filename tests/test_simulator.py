@@ -1,0 +1,108 @@
+"""Timing-model tests: the paper's §3/§4 performance claims."""
+
+import pytest
+
+from repro.core import (HBM, PULP_L2, RPC_DRAM, SRAM, EngineConfig,
+                        MemSystem, Protocol, Transfer1D,
+                        cheshire_idma_config, fragmented_copy,
+                        pulp_idma_config, simulate, utilization_sweep,
+                        xilinx_baseline_config)
+from repro.core.simulator import PULP_TCDM
+
+
+class TestLatencyClaims:
+    """§4.3: 2 cycles descriptor → first read request; +1 per mid-end."""
+
+    def test_two_cycle_launch(self):
+        cfg = EngineConfig(bus_width=8)
+        r = simulate([Transfer1D(0, 0, 64)], cfg, SRAM, SRAM)
+        assert r.first_read_req == 2
+
+    def test_one_cycle_without_legalizer(self):
+        cfg = EngineConfig(bus_width=8, has_legalizer=False)
+        r = simulate([Transfer1D(0, 0, 64)], cfg, SRAM, SRAM)
+        assert r.first_read_req == 1
+
+    def test_midend_adds_one(self):
+        cfg = EngineConfig(bus_width=8, num_midends=1)
+        r = simulate([Transfer1D(0, 0, 64)], cfg, SRAM, SRAM)
+        assert r.first_read_req == 3
+
+    def test_tensor_nd_zero_latency_config(self):
+        cfg = EngineConfig(bus_width=8, num_midends=1,
+                           tensor_nd_zero_latency=True)
+        r = simulate([Transfer1D(0, 0, 64)], cfg, SRAM, SRAM)
+        assert r.first_read_req == 2
+
+
+class TestUtilizationClaims:
+    def test_hbm_16B_at_full_outstanding(self):
+        """§6: 'almost perfect bus utilization for 16 B-long transfers when
+        accessing an endpoint with 100 cycles of latency' (32-b config)."""
+        cfg = EngineConfig(bus_width=4, n_outstanding=64)
+        r = fragmented_copy(64 * 1024, 16, cfg, HBM, HBM)
+        assert r.utilization > 0.97
+
+    def test_deep_memory_hidden_with_enough_outstanding(self):
+        """Fig. 14: utilization improves with NAx until saturation."""
+        utils = []
+        for nax in (2, 8, 64):
+            cfg = EngineConfig(bus_width=4, n_outstanding=nax)
+            utils.append(fragmented_copy(64 * 1024, 64, cfg, HBM, HBM)
+                         .utilization)
+        assert utils[0] < utils[1] <= utils[2] + 1e-9
+        assert utils[2] > 0.97
+
+    def test_sub_bus_transfers_drop(self):
+        """'Any transfers smaller than the bus width will inevitably lead
+        to a substantial drop in utilization.'"""
+        cfg = EngineConfig(bus_width=8, n_outstanding=64)
+        r = fragmented_copy(64 * 1024, 2, cfg, SRAM, SRAM)
+        assert r.utilization < 0.3
+
+    def test_full_bus_utilization_at_16B_32b(self):
+        """§1: 'full bus utilization on transfers as small as 16 B'
+        (32-b configuration, shallow memory)."""
+        cfg = EngineConfig(bus_width=4, n_outstanding=16)
+        r = fragmented_copy(64 * 1024, 16, cfg, SRAM, SRAM)
+        assert r.utilization > 0.97
+
+
+class TestSystemClaims:
+    def test_pulp_8kib_1107_cycles(self):
+        """§3.1: 8 KiB TCDM→L2 measured at 1107 cycles (ideal 1024)."""
+        r = simulate([Transfer1D(0, 0, 8192, Protocol.OBI, Protocol.AXI4)],
+                     pulp_idma_config(), PULP_TCDM, PULP_L2)
+        assert abs(r.cycles - 1107) / 1107 < 0.02
+
+    def test_cheshire_6x_over_xilinx_at_64B(self):
+        """§3.3: ~6× bus utilization over AXI DMA v7.1 at 64-B transfers,
+        iDMA near-perfect."""
+        l2 = MemSystem("SPM", 10, 8)
+        ri = fragmented_copy(64 * 1024, 64, cheshire_idma_config(), l2, l2)
+        rx = fragmented_copy(64 * 1024, 64, xilinx_baseline_config(), l2, l2)
+        ratio = ri.utilization / rx.utilization
+        assert ri.utilization > 0.95
+        assert 5.0 < ratio < 7.0
+
+    def test_decoupling_wins(self):
+        """Read/write decoupling beats store-and-forward at any size."""
+        l2 = MemSystem("SPM", 10, 8)
+        for frag in (16, 64, 256, 1024):
+            rd = fragmented_copy(64 * 1024, frag,
+                                 EngineConfig(bus_width=8, n_outstanding=8,
+                                              decoupled=True), l2, l2)
+            rc = fragmented_copy(64 * 1024, frag,
+                                 EngineConfig(bus_width=8, n_outstanding=8,
+                                              decoupled=False,
+                                              exclusive_transfers=True),
+                                 l2, l2)
+            assert rd.utilization > rc.utilization
+
+
+class TestSweep:
+    def test_sweep_monotone_in_fragment_size(self):
+        cfg = EngineConfig(bus_width=4, n_outstanding=16)
+        u = utilization_sweep(cfg, RPC_DRAM)
+        vals = [u[k] for k in sorted(u)]
+        assert all(b >= a - 1e-9 for a, b in zip(vals, vals[1:]))

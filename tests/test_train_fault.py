@@ -1,0 +1,155 @@
+"""Trainer + fault tolerance: replay/continue verbs, node-failure restore,
+data-pipeline determinism, optimizer sanity."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.configs.base import RunConfig, reduced
+from repro.data import SyntheticLMSource, make_pipeline
+from repro.dist.fault import FaultConfig, FaultInjector
+from repro.train import Trainer, TrainerConfig
+from repro.optim import adamw_init, adamw_update
+
+RCFG = RunConfig(kernels="xla", dtype="float32", remat=False,
+                 learning_rate=1e-3)
+
+
+def small_trainer(tmp_path=None, steps=6, injector=None, policy="replay",
+                  arch="gemma2-2b", seed=0):
+    cfg = reduced(get(arch), n_layers=2, d_model=64, n_heads=2,
+                  n_kv_heads=1, d_ff=128, vocab=128)
+    tcfg = TrainerConfig(
+        total_steps=steps, checkpoint_every=2,
+        checkpoint_dir=str(tmp_path) if tmp_path else None,
+        seed=seed, fault=FaultConfig(policy=policy))
+    return Trainer(cfg, RCFG, tcfg, seq_len=32, global_batch=4,
+                   injector=injector)
+
+
+class TestPipeline:
+    def test_deterministic_and_seekable(self):
+        src = SyntheticLMSource(1000, 16, 4, seed=3)
+        b1 = src.batch(5)
+        b2 = src.batch(5)
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+        pf = make_pipeline(1000, 16, 4, seed=3)
+        for _ in range(3):
+            step, batch = next(pf)
+        pf.seek(2)
+        step2, batch2 = next(pf)
+        assert step2 == 2 and step == 2
+        assert np.array_equal(batch["tokens"], batch2["tokens"])
+
+    def test_prefetch_lookahead(self):
+        pf = make_pipeline(100, 8, 2, start_step=10)
+        assert len(pf._queue) == pf.lookahead
+        step, _ = next(pf)
+        assert step == 10
+
+
+class TestOptim:
+    def test_adamw_reduces_toy_loss(self):
+        w = {"w": jnp.asarray([2.0, -3.0])}
+        st = adamw_init(w)
+
+        def loss(p):
+            return jnp.sum(p["w"] ** 2)
+
+        for _ in range(50):
+            g = jax.grad(loss)(w)
+            w, st, _ = adamw_update(g, st, w, lr=0.1, weight_decay=0.0)
+        assert float(loss(w)) < 0.2
+
+    def test_grad_clip(self):
+        w = {"w": jnp.ones(4)}
+        st = adamw_init(w)
+        g = {"w": jnp.full(4, 100.0)}
+        _, _, m = adamw_update(g, st, w, lr=0.1, grad_clip=1.0)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+class TestTrainerFaults:
+    def test_loss_decreases_on_fixed_batch(self):
+        """Overfit one batch: loss must drop (uniform-random stream data is
+        already at ln(V), so the trainer loop test checks replay/faults and
+        this one checks optimization)."""
+        from repro.configs import get
+        from repro.configs.base import reduced
+        from repro.train.train_step import (init_train_state,
+                                            make_train_step)
+        cfg = reduced(get("gemma2-2b"), n_layers=2, d_model=64, n_heads=2,
+                      n_kv_heads=1, d_ff=128, vocab=128)
+        key = jax.random.PRNGKey(0)
+        state = init_train_state(key, cfg)
+        step = jax.jit(make_train_step(cfg, RCFG, total_steps=40))
+        batch = {"tokens": jax.random.randint(key, (4, 32), 0, 128)}
+        first = None
+        for _ in range(12):
+            state, m = step(state, batch)
+            first = first if first is not None else float(m["loss"])
+        assert float(m["loss"]) < first - 0.2
+
+    def test_replay_is_exact(self):
+        """A replayed step produces the same state as a fault-free run."""
+        inj = FaultInjector(fail_steps=[2], kind="step")
+        tr_f = small_trainer(steps=4, injector=inj)
+        s_f = tr_f.run()
+        tr_c = small_trainer(steps=4)
+        s_c = tr_c.run()
+        assert tr_f.stats.replays == 1
+        for a, b in zip(jax.tree_util.tree_leaves(s_f["params"]),
+                        jax.tree_util.tree_leaves(s_c["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_continue_skips(self):
+        inj = FaultInjector(fail_steps=[1], kind="step")
+        tr = small_trainer(steps=4, injector=inj, policy="continue")
+        tr.run()
+        assert tr.stats.skipped == 1
+
+    def test_node_failure_restores_from_checkpoint(self, tmp_path):
+        inj = FaultInjector(fail_steps=[4], kind="node")
+        tr = small_trainer(tmp_path, steps=6, injector=inj)
+        state = tr.run()
+        assert tr.stats.node_failures == 1
+        assert int(state["step"]) == 6
+        # equivalent to an uninterrupted run (deterministic replay)
+        tr2 = small_trainer(steps=6)
+        s2 = tr2.run()
+        for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
+                        jax.tree_util.tree_leaves(s2["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_restart_from_checkpoint_continues(self, tmp_path):
+        tr = small_trainer(tmp_path, steps=4)
+        tr.run()
+        # "new process": fresh trainer picks up at step 4
+        tr2 = small_trainer(tmp_path, steps=6)
+        state = tr2.run()
+        assert int(state["step"]) == 6
+
+
+class TestMicrobatch:
+    def test_grad_accumulation_matches_full_batch(self):
+        from repro.models import init_lm
+        from repro.train.train_step import init_train_state, make_train_step
+        cfg = reduced(get("internlm2-20b"), n_layers=2, d_model=64,
+                      n_heads=2, n_kv_heads=1, d_ff=128, vocab=128)
+        key = jax.random.PRNGKey(0)
+        state = init_train_state(key, cfg)
+        batch = {"tokens": jax.random.randint(key, (4, 32), 0, 128)}
+        s1, m1 = make_train_step(cfg, RCFG)(state, batch)
+        rc2 = RunConfig(kernels="xla", dtype="float32", remat=False,
+                        learning_rate=1e-3, microbatch=2)
+        s2, m2 = make_train_step(cfg, rc2)(state, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-5)
+        for a, b in zip(jax.tree_util.tree_leaves(s1["params"]),
+                        jax.tree_util.tree_leaves(s2["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-6)
