@@ -1,10 +1,15 @@
 """Fig. 8 reproduction: bus utilization vs transfer length, iDMA vs a
 non-decoupled store-and-forward engine (AXI DMA v7.1 class), Cheshire
-configuration (64-b bus, SPM endpoint)."""
+configuration (64-b bus, SPM endpoint).
+
+Runs on the structure-of-arrays descriptor plane: `fragmented_copy`
+builds one `DescriptorBatch` per sweep cell and `simulate_batch` walks
+the burst recurrences over arrays."""
 
 from __future__ import annotations
 
-from repro.core import (MemSystem, cheshire_idma_config, fragmented_copy,
+from repro.core import (DescriptorBatch, MemSystem, cheshire_idma_config,
+                        fragmented_copy, simulate_batch,
                         xilinx_baseline_config)
 
 LENGTHS = [8, 16, 32, 64, 128, 256, 512, 1024, 4096]
@@ -26,9 +31,11 @@ def run(csv_rows):
     csv_rows.append(("fig8_64B_speedup_vs_xilinx",
                      ri.utilization / rx.utilization, "paper=~6x"))
     # PULP §3.1: 8 KiB transfer cycles
-    from repro.core import Protocol, Transfer1D, pulp_idma_config, simulate
+    from repro.core import Protocol, Transfer1D, pulp_idma_config
     from repro.core.simulator import PULP_L2, PULP_TCDM
-    r = simulate([Transfer1D(0, 0, 8192, Protocol.OBI, Protocol.AXI4)],
-                 pulp_idma_config(), PULP_TCDM, PULP_L2)
+    r = simulate_batch(
+        DescriptorBatch.from_transfers(
+            [Transfer1D(0, 0, 8192, Protocol.OBI, Protocol.AXI4)]),
+        pulp_idma_config(), PULP_TCDM, PULP_L2)
     csv_rows.append(("pulp_8KiB_cycles", r.cycles,
                      "paper=1107,ideal=1024"))

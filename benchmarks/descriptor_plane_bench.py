@@ -1,0 +1,124 @@
+"""Descriptor-plane benchmark: structure-of-arrays vs per-object hot path.
+
+Three measurements:
+
+1. The paper's worst-case Fig. 14 sweep cell — 64 KiB copied as 65 536
+   one-byte descriptors — timed on the object path (`fragmented_copy_
+   reference`: one frozen `Transfer1D` per descriptor, scalar legalizer,
+   per-burst dict bookkeeping) and on the batch path (`DescriptorBatch` +
+   `legalize_batch` + `simulate_batch`).  Asserts the batch path is >= 10x
+   faster and cycle-identical.
+
+2. The full Fig. 14 sweep (11 fragment sizes x 3 memory systems) wall
+   clock on the batch path — the number tracked across PRs via
+   ``benchmarks.run --json``.
+
+3. A 1M-descriptor random scatter/gather stream — infeasible on the
+   object path (it would materialize and walk millions of dataclass
+   instances) — which must legalize + simulate in under 10 s.
+
+Results are also stashed in the module-level ``LAST`` dict so
+``benchmarks/run.py --json`` can persist them as
+``BENCH_descriptor_plane.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (HBM, RPC_DRAM, SRAM, DescriptorBatch, EngineConfig,
+                        fragmented_copy, fragmented_copy_reference,
+                        legalize_batch, simulate_batch)
+from repro.core.analytics import burst_profile
+
+TOTAL = 64 * 1024
+SWEEP_FRAGS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+SWEEP_SYSTEMS = (SRAM, RPC_DRAM, HBM)
+SCATTER_N = 1_000_000
+
+#: last run's headline numbers, for `benchmarks.run --json`
+LAST = {}
+
+
+def _best_of(fn, repeats=3):
+    best = float("inf")
+    result = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def scatter_gather_batch(n: int = SCATTER_N, seed: int = 0
+                         ) -> DescriptorBatch:
+    """Random scatter/gather stream: `n` descriptors of 1..511 B at
+    arbitrary (misaligned) addresses in a 1 GiB window."""
+    rng = np.random.default_rng(seed)
+    return DescriptorBatch.from_arrays(
+        src_addr=rng.integers(0, 1 << 30, n),
+        dst_addr=rng.integers(0, 1 << 30, n),
+        length=rng.integers(1, 512, n))
+
+
+def run(csv_rows):
+    cfg = EngineConfig(bus_width=4, n_outstanding=16)
+
+    # 1 — object vs batch on the 64 KiB / 1 B cell (like-for-like
+    # best-of-N on both sides so the tracked speedup is not warm-up bias;
+    # one higher-repeat retry guards the gate against transient load)
+    t_obj = t_bat = speedup = 0.0
+    for repeats in (2, 5):
+        o, r_obj = _best_of(
+            lambda: fragmented_copy_reference(TOTAL, 1, cfg, SRAM, SRAM),
+            repeats=repeats)
+        b, r_bat = _best_of(
+            lambda: fragmented_copy(TOTAL, 1, cfg, SRAM, SRAM),
+            repeats=repeats)
+        assert r_obj.cycles == r_bat.cycles, \
+            f"batch path diverged: {r_obj.cycles} != {r_bat.cycles}"
+        t_obj, t_bat = o, b
+        speedup = t_obj / t_bat
+        if speedup >= 10.0:
+            break
+    csv_rows.append(("descplane_64KiB_1B_object_s", t_obj, ""))
+    csv_rows.append(("descplane_64KiB_1B_batch_s", t_bat, ""))
+    csv_rows.append(("descplane_64KiB_1B_speedup", speedup, "target>=10x"))
+    LAST.update({"speedup_64KiB_1B": speedup,
+                 "object_path_64KiB_1B_s": t_obj,
+                 "batch_path_64KiB_1B_s": t_bat})
+    assert speedup >= 10.0, \
+        f"SoA descriptor plane only {speedup:.1f}x faster (need >= 10x)"
+
+    # 2 — full Fig. 14 sweep wall clock on the batch path
+    def sweep():
+        for mem in SWEEP_SYSTEMS:
+            for frag in SWEEP_FRAGS:
+                fragmented_copy(TOTAL, frag, cfg, mem, mem)
+    t0 = time.perf_counter()
+    sweep()
+    t_sweep = time.perf_counter() - t0
+    csv_rows.append(("descplane_fig14_sweep_wall_s", t_sweep, "33 cells"))
+
+    # 3 — 1M-descriptor scatter/gather, batch path only
+    batch = scatter_gather_batch()
+    t0 = time.perf_counter()
+    res = simulate_batch(batch, cfg, SRAM, SRAM)   # legalizes internally
+    t_sg = time.perf_counter() - t0
+    prof = burst_profile(legalize_batch(batch, bus_width=cfg.bus_width),
+                         bus_width=cfg.bus_width)
+    csv_rows.append(("descplane_scatter_gather_1M_s", t_sg, "limit<10s"))
+    csv_rows.append(("descplane_scatter_gather_1M_bursts",
+                     prof["n_bursts"], ""))
+    csv_rows.append(("descplane_scatter_gather_1M_shifter_eff",
+                     prof["shifter_efficiency"], ""))
+    LAST.update({
+        "fig14_sweep_wall_s": t_sweep,
+        "scatter_gather_1M_s": t_sg,
+        "scatter_gather_1M_bursts": int(prof["n_bursts"]),
+    })
+    assert t_sg < 10.0, \
+        f"1M scatter/gather took {t_sg:.1f}s (limit 10s)"
+    assert res.useful_bytes == int(batch.length.sum())

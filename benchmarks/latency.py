@@ -1,9 +1,9 @@
-"""§4.3 reproduction: launch latency across configurations."""
+"""§4.3 reproduction: launch latency across configurations (batch path)."""
 
 from __future__ import annotations
 
-from repro.core import (EngineConfig, SRAM, Transfer1D, simulate,
-                        legal_latency)
+from repro.core import (DescriptorBatch, EngineConfig, SRAM, Transfer1D,
+                        simulate_batch, legal_latency)
 
 
 def run(csv_rows):
@@ -16,14 +16,17 @@ def run(csv_rows):
          EngineConfig(bus_width=8, num_midends=1,
                       tensor_nd_zero_latency=True), 2),
     ]
+    one = DescriptorBatch.from_transfers([Transfer1D(0, 0, 64)])
     for name, cfg, expected in cases:
-        r = simulate([Transfer1D(0, 0, 64)], cfg, SRAM, SRAM)
+        r = simulate_batch(one, cfg, SRAM, SRAM)
         csv_rows.append((f"latency_{name}_cycles", r.first_read_req,
                          f"paper={expected}"))
     # protocol independence (paper: latency independent of protocol)
     from repro.core import Protocol
     for proto in (Protocol.AXI4, Protocol.OBI, Protocol.TILELINK):
-        r = simulate([Transfer1D(0, 0, 64, proto, proto)],
-                     EngineConfig(bus_width=8), SRAM, SRAM)
+        r = simulate_batch(
+            DescriptorBatch.from_transfers(
+                [Transfer1D(0, 0, 64, proto, proto)]),
+            EngineConfig(bus_width=8), SRAM, SRAM)
         csv_rows.append((f"latency_{proto.value}_cycles", r.first_read_req,
                          "paper=2 (protocol-independent)"))

@@ -1,26 +1,35 @@
 """Fig. 14 reproduction: bus utilization vs transfer size for the three
 memory systems (SRAM / RPC-DRAM / HBM) at increasing outstanding-transfer
-counts — 32-b base configuration, 64 KiB total."""
+counts — 32-b base configuration, 64 KiB total.
+
+The fragmented descriptor stream of each sweep cell is built once as a
+`DescriptorBatch` per fragment size and re-simulated across all (memory
+system, NAx) points — the batch is immutable, so the 11x3xN sweep never
+re-materializes descriptors."""
 
 from __future__ import annotations
 
 from repro.core import (HBM, RPC_DRAM, SRAM, EngineConfig,
-                        utilization_sweep)
+                        make_fragmented_batch, simulate_batch)
 
 SYSTEMS = [SRAM, RPC_DRAM, HBM]
 NAX = [2, 4, 8, 16, 32, 64]
 FRAGS = [4, 8, 16, 32, 64, 128, 256, 1024]
+TOTAL = 64 * 1024
 
 
 def run(csv_rows):
+    batches = {frag: make_fragmented_batch(TOTAL, frag) for frag in FRAGS}
     for mem in SYSTEMS:
         for nax in NAX:
             cfg = EngineConfig(bus_width=4, n_outstanding=nax)
-            util = utilization_sweep(cfg, mem, fragments=FRAGS)
-            for frag, u in util.items():
+            for frag in FRAGS:
+                res = simulate_batch(batches[frag], cfg, mem, mem)
                 csv_rows.append(
-                    (f"fig14_{mem.name}_nax{nax}_{frag}B", u, ""))
+                    (f"fig14_{mem.name}_nax{nax}_{frag}B",
+                     res.utilization, ""))
     # §4.4 headline: 4x bus width reaches ~full utilization even at depth
     cfg = EngineConfig(bus_width=4, n_outstanding=64)
-    u16 = utilization_sweep(cfg, HBM, fragments=(16,))[16]
+    u16 = simulate_batch(make_fragmented_batch(TOTAL, 16), cfg,
+                         HBM, HBM).utilization
     csv_rows.append(("fig14_HBM_16B_nax64", u16, "paper=~1.0"))

@@ -1,44 +1,92 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,value,derived`` CSV.  `python -m benchmarks.run [--only X]``.
+Prints ``name,value,derived`` CSV.  `python -m benchmarks.run [--only X]`.
+
+Suites are imported lazily so `--only` works even when a heavyweight or
+optional dependency of an unrelated suite (jax, repro.dist) is missing.
+
+`--json [PATH]` additionally writes the descriptor-plane perf headline
+(object-vs-batch speedup, sweep wall clocks) plus per-suite wall-clock
+timings to PATH (default ``BENCH_descriptor_plane.json``) so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
+import json
 import sys
-
-from . import (area_model, bus_utilization, kernel_bench, latency,
-               outstanding_sweep, roofline, timing_model, workload_speedup)
+import time
 
 SUITES = [
-    ("bus_utilization", bus_utilization),     # Fig. 8 + §3.1
-    ("outstanding_sweep", outstanding_sweep),  # Fig. 14
-    ("area_model", area_model),               # Table 4 / Fig. 12
-    ("timing_model", timing_model),           # Fig. 13
-    ("latency", latency),                     # §4.3
-    ("workload_speedup", workload_speedup),   # §3.4 / §3.5 (Fig. 11)
-    ("kernel_bench", kernel_bench),           # kernels + TPU rooflines
-    ("roofline", roofline),                   # dry-run roofline table
+    ("bus_utilization", "Fig. 8 + §3.1"),
+    ("outstanding_sweep", "Fig. 14"),
+    ("area_model", "Table 4 / Fig. 12"),
+    ("timing_model", "Fig. 13"),
+    ("latency", "§4.3"),
+    ("workload_speedup", "§3.4 / §3.5 (Fig. 11)"),
+    ("descriptor_plane", "SoA vs object descriptor hot path"),
+    ("kernel_bench", "kernels + TPU rooflines"),
+    ("roofline", "dry-run roofline table"),
 ]
+
+#: suite name → module (descriptor_plane lives in descriptor_plane_bench)
+_MODULES = {name: f"benchmarks.{name}" for name, _ in SUITES}
+_MODULES["descriptor_plane"] = "benchmarks.descriptor_plane_bench"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", nargs="?", const="BENCH_descriptor_plane.json",
+                    default=None, metavar="PATH",
+                    help="write descriptor-plane perf + suite wall clocks")
     args = ap.parse_args()
 
     rows = []
-    for name, mod in SUITES:
+    wall = {}
+    errors = {}
+    for name, what in SUITES:
         if args.only and args.only != name:
             continue
-        print(f"# suite: {name}", file=sys.stderr)
-        mod.run(rows)
+        print(f"# suite: {name} ({what})", file=sys.stderr)
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(_MODULES[name])
+            mod.run(rows)
+            wall[name] = time.perf_counter() - t0
+        except Exception as err:
+            # a broken/optional-dependency suite must not discard the
+            # rows and timings every suite before it already measured
+            if args.only:
+                raise
+            errors[name] = f"{type(err).__name__}: {err}"
+            print(f"# suite {name} FAILED: {errors[name]}", file=sys.stderr)
     print("name,value,derived")
     for name, value, derived in rows:
         if isinstance(value, float):
             value = f"{value:.6g}"
         print(f"{name},{value},{derived}")
+
+    if args.json:
+        payload = {"suite_wall_clock_s": wall}
+        if errors:
+            payload["suite_errors"] = errors
+        if "descriptor_plane" in wall or "descriptor_plane" in errors:
+            try:
+                from benchmarks import descriptor_plane_bench
+                if descriptor_plane_bench.LAST:   # partial data on failure
+                    payload["descriptor_plane"] = dict(
+                        descriptor_plane_bench.LAST)
+            except Exception:
+                pass          # import-time failure already in suite_errors
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+    if errors:
+        sys.exit(1)        # after persisting partial results
 
 
 if __name__ == "__main__":

@@ -16,7 +16,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core import EngineConfig, MemSystem, Protocol, Transfer1D, simulate
+from repro.core import (DescriptorBatch, EngineConfig, MemSystem, Protocol,
+                        Transfer1D, simulate_batch)
 
 # ---------------------------------------------------------------- MemPool
 
@@ -28,7 +29,8 @@ MEMPOOL_L2 = MemSystem("L2", latency=20, outstanding=32)
 def _idma_cycles(nbytes: int) -> int:
     cfg = EngineConfig(bus_width=MEMPOOL_BUS, n_outstanding=32,
                        buffer_beats=64, decoupled=True)
-    r = simulate([Transfer1D(0, 0, nbytes)], cfg, MEMPOOL_L2, MEMPOOL_L2)
+    batch = DescriptorBatch.from_transfers([Transfer1D(0, 0, nbytes)])
+    r = simulate_batch(batch, cfg, MEMPOOL_L2, MEMPOOL_L2)
     return r.cycles
 
 

@@ -6,40 +6,50 @@ transfer legalizer, decoupled read/write transport, in-stream accelerators,
 the Init pseudo-protocol, an error handler, and area/timing/latency models.
 """
 
-from .descriptor import (BackendOptions, InitPattern, MidendBundle,
+from .descriptor import (CODE_PROTO, PROTO_CODE, BackendOptions,
+                         DescriptorBatch, InitPattern, MidendBundle,
                          NdTransfer, Protocol, RtConfig, TensorDim,
-                         Transfer1D, contiguous_coverage, total_bytes)
+                         Transfer1D, concat_batches, contiguous_coverage,
+                         total_bytes)
 from .legalizer import (PAGE_SIZE, TPU_DMA_GRANULE, check_legal,
-                        legal_latency, legalize, legalize_tile)
-from .midend import (coalesce_nd, iter_tensor_nd, mp_dist, mp_dist_tree,
-                     mp_split, rt_schedule, split_and_distribute, tensor_2d,
-                     tensor_nd)
+                        legal_latency, legalize, legalize_batch,
+                        legalize_tile)
+from .midend import (coalesce_nd, iter_tensor_nd, mp_dist, mp_dist_batch,
+                     mp_dist_tree, mp_split, mp_split_batch, rt_schedule,
+                     split_and_distribute, tensor_2d, tensor_nd,
+                     tensor_nd_batch)
 from .frontend import (DescFrontend, InstFrontend, RegFrontend, write_chain)
 from .backend import (MemoryMap, TransferError, execute, init_stream,
                       splitmix32, splitmix64)
 from .engine import (ErrorPolicy, IDMAEngine, TilePlan, plan_nd_copy)
 from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, EngineConfig,
                         MemSystem, SimResult, cheshire_idma_config,
-                        fragmented_copy, manticore_idma_config,
-                        pulp_idma_config, simulate, utilization_sweep,
+                        fragmented_copy, fragmented_copy_reference,
+                        make_fragmented_batch, manticore_idma_config,
+                        pulp_idma_config, simulate, simulate_batch,
+                        simulate_reference, utilization_sweep,
                         xilinx_baseline_config)
 from . import analytics, instream
 
 __all__ = [
-    "BackendOptions", "InitPattern", "MidendBundle", "NdTransfer",
-    "Protocol", "RtConfig", "TensorDim", "Transfer1D",
-    "contiguous_coverage", "total_bytes",
+    "BackendOptions", "CODE_PROTO", "DescriptorBatch", "InitPattern",
+    "MidendBundle", "NdTransfer", "PROTO_CODE", "Protocol", "RtConfig",
+    "TensorDim", "Transfer1D", "concat_batches", "contiguous_coverage",
+    "total_bytes",
     "PAGE_SIZE", "TPU_DMA_GRANULE", "check_legal", "legal_latency",
-    "legalize", "legalize_tile",
-    "coalesce_nd", "iter_tensor_nd", "mp_dist", "mp_dist_tree", "mp_split",
-    "rt_schedule", "split_and_distribute", "tensor_2d", "tensor_nd",
+    "legalize", "legalize_batch", "legalize_tile",
+    "coalesce_nd", "iter_tensor_nd", "mp_dist", "mp_dist_batch",
+    "mp_dist_tree", "mp_split", "mp_split_batch", "rt_schedule",
+    "split_and_distribute", "tensor_2d", "tensor_nd", "tensor_nd_batch",
     "DescFrontend", "InstFrontend", "RegFrontend", "write_chain",
     "MemoryMap", "TransferError", "execute", "init_stream", "splitmix32",
     "splitmix64",
     "ErrorPolicy", "IDMAEngine", "TilePlan", "plan_nd_copy",
     "HBM", "PULP_L2", "RPC_DRAM", "SRAM", "EngineConfig", "MemSystem",
     "SimResult", "cheshire_idma_config", "fragmented_copy",
+    "fragmented_copy_reference", "make_fragmented_batch",
     "manticore_idma_config", "pulp_idma_config", "simulate",
-    "utilization_sweep", "xilinx_baseline_config",
+    "simulate_batch", "simulate_reference", "utilization_sweep",
+    "xilinx_baseline_config",
     "analytics", "instream",
 ]

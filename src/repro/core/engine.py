@@ -24,9 +24,9 @@ import numpy as np
 
 from . import simulator as sim
 from .backend import MemoryMap, TransferError, execute
-from .descriptor import NdTransfer, Protocol, Transfer1D
-from .legalizer import legalize, legalize_tile
-from .midend import mp_split, mp_dist, tensor_nd
+from .descriptor import DescriptorBatch, NdTransfer, Transfer1D
+from .legalizer import legalize_batch, legalize_tile
+from .midend import mp_dist_batch, mp_split_batch, tensor_nd_batch
 
 Descriptor = Union[Transfer1D, NdTransfer]
 
@@ -102,6 +102,23 @@ class IDMAEngine:
         self.stats.completed += 1
         return tid
 
+    def submit_batch(self, batch: DescriptorBatch) -> List[int]:
+        """Submit every row of a `DescriptorBatch` (batched doorbell).
+
+        Timing-only engines (no memory map) take the vectorized fast path:
+        ids are assigned in bulk with no per-row descriptor objects.
+        """
+        n = len(batch)
+        ids = list(range(self._next_id, self._next_id + n))
+        if self.mem is None:
+            self._next_id += n
+            self.stats.submitted += n
+            self.stats.completed += n
+            if n:
+                self._last_completed = ids[-1]
+            return ids
+        return [self.submit(t) for t in batch.to_transfers()]
+
     def last_completed_id(self) -> int:
         return self._last_completed
 
@@ -110,26 +127,33 @@ class IDMAEngine:
 
     # -- pipeline ------------------------------------------------------------
 
-    def lower(self, transfer: Descriptor) -> List[List[Transfer1D]]:
-        """Descriptor → per-back-end legalized burst lists (no execution)."""
+    def lower_batch(self, transfer: Descriptor) -> List[DescriptorBatch]:
+        """Descriptor → per-back-end legalized burst batches (no execution).
+
+        The whole mid-end → mp_split → mp_dist → legalizer pipeline runs on
+        the structure-of-arrays plane; custom object-level mid-end callables
+        (if any) are bridged through the adapter converters.
+        """
         if isinstance(transfer, NdTransfer):
-            ones = tensor_nd(transfer)
+            batch = tensor_nd_batch(transfer)
         else:
-            ones = [transfer]
-        for me in self.midends:
-            ones = me(ones)
+            batch = DescriptorBatch.from_transfers([transfer])
+        if self.midends:
+            ones = batch.to_transfers()
+            for me in self.midends:
+                ones = me(ones)
+            batch = DescriptorBatch.from_transfers(ones)
         if self.num_backends > 1:
-            split: List[Transfer1D] = []
-            for t in ones:
-                split.extend(mp_split(t, self.backend_boundary, which="dst"))
-            ports = mp_dist(split, self.num_backends, scheme="address",
-                            boundary=self.backend_boundary, which="dst")
+            split = mp_split_batch(batch, self.backend_boundary, which="dst")
+            ports = mp_dist_batch(split, self.num_backends, scheme="address",
+                                  boundary=self.backend_boundary, which="dst")
         else:
-            ports = [ones]
-        return [
-            [b for t in port for b in legalize(t, bus_width=self.bus_width)]
-            for port in ports
-        ]
+            ports = [batch]
+        return [legalize_batch(p, bus_width=self.bus_width) for p in ports]
+
+    def lower(self, transfer: Descriptor) -> List[List[Transfer1D]]:
+        """Object-API adapter over `lower_batch` (functional path, tests)."""
+        return [p.to_transfers() for p in self.lower_batch(transfer)]
 
     def _run(self, transfer: Descriptor) -> None:
         if self.mem is None:
@@ -174,11 +198,11 @@ class IDMAEngine:
     def simulate(self, transfer: Descriptor) -> sim.SimResult:
         """Cycle model of this engine executing `transfer` (single port) or
         the max over ports (multi-back-end: ports run in parallel)."""
-        ports = self.lower(transfer)
+        ports = self.lower_batch(transfer)
         results = [
-            sim.simulate(bursts, self.sim_config, self.src_system,
-                         self.dst_system, already_legal=True)
-            for bursts in ports if bursts
+            sim.simulate_batch(bursts, self.sim_config, self.src_system,
+                               self.dst_system, already_legal=True)
+            for bursts in ports if len(bursts)
         ]
         if not results:
             return sim.SimResult(0, 0, 0, self.sim_config.launch_latency, 0)

@@ -26,7 +26,10 @@ import struct
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from .descriptor import (BackendOptions, NdTransfer, Protocol, TensorDim,
+import numpy as np
+
+from .descriptor import (CODE_PROTO, PROTO_CODE, BackendOptions,
+                         DescriptorBatch, NdTransfer, Protocol, TensorDim,
                          Transfer1D)
 
 # ---------------------------------------------------------------------------
@@ -131,8 +134,15 @@ _DESC_FMT = "<QQQQII"
 DESC_SIZE = struct.calcsize(_DESC_FMT)
 _NULL = 0xFFFF_FFFF_FFFF_FFFF
 
-_PROTO_CODE = {p: i for i, p in enumerate(Protocol)}
-_CODE_PROTO = {i: p for i, p in enumerate(Protocol)}
+# Canonical wire encoding lives next to the descriptor types.
+_PROTO_CODE = PROTO_CODE
+_CODE_PROTO = CODE_PROTO
+
+#: NumPy view of the `desc_64` record — lets a contiguous descriptor ring
+#: be decoded into a `DescriptorBatch` with one `frombuffer` instead of a
+#: per-hop unpack loop.
+_DESC_DTYPE = np.dtype([("next", "<u8"), ("src", "<u8"), ("dst", "<u8"),
+                        ("length", "<u8"), ("sp", "<u4"), ("dp", "<u4")])
 
 
 def pack_descriptor(src: int, dst: int, length: int,
@@ -176,6 +186,33 @@ class DescFrontend:
             ids.append(self.engine.submit(t))
             addr = nxt
         return ids
+
+    def doorbell_ring(self, base: int, count: int) -> List[int]:
+        """Batched doorbell: decode `count` contiguous descriptors at
+        `base` into a `DescriptorBatch` in one `frombuffer` and submit them
+        as a batch — the XDMA-style alternative to walking a chain one
+        manager-port fetch at a time (next-pointers are ignored; the ring
+        layout IS the chain)."""
+        if base < 0 or count < 0:
+            raise ValueError("descriptor ring base/count must be >= 0")
+        if base % 8:
+            raise ValueError("descriptor ring must be 8-byte aligned")
+        end = base + count * DESC_SIZE
+        if end > len(self.memory):
+            raise ValueError("descriptor ring out of bounds")
+        raw = np.frombuffer(bytes(self.memory[base:end]), dtype=_DESC_DTYPE)
+        n_proto = len(Protocol)
+        if (raw["sp"] >= n_proto).any() or (raw["dp"] >= n_proto).any():
+            raise ValueError("descriptor ring contains invalid protocol "
+                             "codes (corrupted descriptor?)")
+        self.fetches += count
+        batch = DescriptorBatch.from_arrays(
+            src_addr=raw["src"].astype(np.int64),
+            dst_addr=raw["dst"].astype(np.int64),
+            length=raw["length"].astype(np.int64),
+            src_proto=raw["sp"].astype(np.uint8),
+            dst_proto=raw["dp"].astype(np.uint8))
+        return self.engine.submit_batch(batch)
 
 
 def write_chain(memory: bytearray, base: int,

@@ -25,10 +25,12 @@ page/burst legalization, consumed by the Pallas kernel generators.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
-from .descriptor import (GENERATOR_PROTOCOLS, BackendOptions, Protocol,
-                         Transfer1D)
+import numpy as np
+
+from .descriptor import (CODE_PROTO, GENERATOR_PROTOCOLS, BackendOptions,
+                         DescriptorBatch, Protocol, Transfer1D)
 
 PAGE_SIZE = 4096          # AXI 4 KiB page rule
 AXI_MAX_BEATS = 256       # AXI4 burst cap in beats
@@ -160,6 +162,193 @@ def legalize(transfer: Transfer1D, bus_width: int = 8,
                 seg -= blen
         start = boundary
     return bursts
+
+
+# --------------------------------------------------------------------------
+# Batched (structure-of-arrays) legalization — the vectorized hot path.
+# --------------------------------------------------------------------------
+
+def _progression_cuts(addr: np.ndarray, length: np.ndarray, period: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized `_page_cuts` over rows: (row_index, cut_offset) pairs for
+    every `period`-aligned absolute address strictly inside each transfer."""
+    first = period - addr % period                    # in (0, period]
+    cnt = np.maximum((length - first + period - 1) // period, 0)
+    total = int(cnt.sum())
+    rows = np.repeat(np.arange(addr.shape[0], dtype=np.int64), cnt)
+    starts = np.concatenate(
+        ([0], np.cumsum(cnt)[:-1])).astype(np.int64)
+    k = np.arange(total, dtype=np.int64) - np.repeat(starts, cnt)
+    return rows, first[rows] + k * period
+
+
+def _boundary_segments(src: np.ndarray, dst: np.ndarray, length: np.ndarray,
+                       p_src: int, p_dst: int
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split each row at the union of both ports' boundary cuts.
+
+    Returns (row, segment_start_offset, segment_length); segments of one row
+    are consecutive and ordered.  Rows must have length > 0.
+    """
+    m = length.shape[0]
+    rows_parts = []
+    offs_parts = []
+    if p_src > 0:
+        r, o = _progression_cuts(src, length, p_src)
+        rows_parts.append(r)
+        offs_parts.append(o)
+    if p_dst > 0:
+        r, o = _progression_cuts(dst, length, p_dst)
+        rows_parts.append(r)
+        offs_parts.append(o)
+    rows_parts.append(np.arange(m, dtype=np.int64))
+    offs_parts.append(length.astype(np.int64))    # the final boundary
+    row = np.concatenate(rows_parts)
+    off = np.concatenate(offs_parts)
+    order = np.lexsort((off, row))
+    row, off = row[order], off[order]
+    keep = np.empty(row.shape[0], dtype=bool)
+    keep[0] = True
+    keep[1:] = (row[1:] != row[:-1]) | (off[1:] != off[:-1])
+    row, off = row[keep], off[keep]
+    new_row = np.empty(row.shape[0], dtype=bool)
+    new_row[0] = True
+    new_row[1:] = row[1:] != row[:-1]
+    prev = np.concatenate(([0], off[:-1]))
+    start = np.where(new_row, 0, prev)
+    return row, start, off - start
+
+
+def _chunk_segments(row: np.ndarray, start: np.ndarray, seg_len: np.ndarray,
+                    cap: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Chop every segment into `cap`-byte chunks from its start (cap 0 =
+    unlimited) — vectorized tail of the object legalizer's inner loop."""
+    if cap <= 0:
+        return row, start, seg_len
+    cnt = -(-seg_len // cap)
+    total = int(cnt.sum())
+    rep = np.repeat(np.arange(seg_len.shape[0], dtype=np.int64), cnt)
+    starts = np.concatenate(([0], np.cumsum(cnt)[:-1])).astype(np.int64)
+    j = np.arange(total, dtype=np.int64) - np.repeat(starts, cnt)
+    off = start[rep] + j * cap
+    return row[rep], off, np.minimum(cap, seg_len[rep] - j * cap)
+
+
+def legalize_batch(batch: DescriptorBatch, bus_width: int = 8
+                   ) -> DescriptorBatch:
+    """Vectorized `legalize` over a whole `DescriptorBatch`.
+
+    Byte-identical to mapping the object legalizer over the rows (property
+    tests assert this): bursts come out grouped by input row in input order,
+    ascending by offset, zero-length rows dropped.  Rows are grouped by
+    (protocol pair, max_burst, reduce_len) so page/cap parameters are
+    scalars inside each vectorized group; the rare pow2-aligned protocols
+    (TileLink) fall back to the scalar walk per row, everything else is
+    pure array arithmetic.
+    """
+    if len(batch) == 0:
+        return batch
+    nz = np.nonzero(batch.length > 0)[0]
+    out_row: List[np.ndarray] = []
+    out_off: List[np.ndarray] = []
+    out_len: List[np.ndarray] = []
+    if nz.shape[0]:
+        cols = (batch.src_proto[nz], batch.dst_proto[nz],
+                batch.max_burst[nz], batch.reduce_len[nz])
+        if all((c == c[0]).all() for c in cols):
+            # the overwhelmingly common case: one homogeneous rule group
+            groups = [(tuple(int(c[0]) for c in cols), nz)]
+        else:
+            # mixed-radix combination of per-column inverses — much faster
+            # than np.unique(axis=0)'s row-wise void comparisons
+            uniques = []
+            invs = []
+            radix = 1
+            for c in cols:
+                u, inv = np.unique(c, return_inverse=True)
+                uniques.append(u)
+                invs.append(inv)
+                radix *= int(u.shape[0])
+            groups = []
+            if radix < 2 ** 62:
+                inv_all = np.zeros(nz.shape[0], dtype=np.int64)
+                for u, inv in zip(uniques, invs):
+                    inv_all = inv_all * u.shape[0] + inv
+                gids, ginv = np.unique(inv_all, return_inverse=True)
+                for g, gid in enumerate(gids.tolist()):
+                    vals = []
+                    for u in reversed(uniques):
+                        gid, r = divmod(gid, u.shape[0])
+                        vals.append(int(u[r]))
+                    groups.append((tuple(reversed(vals)), nz[ginv == g]))
+            else:       # degenerate: mixed radix would overflow int64
+                seen = {}
+                for pos, key in enumerate(zip(*(c.tolist() for c in cols))):
+                    seen.setdefault(key, []).append(pos)
+                for key, poss in seen.items():
+                    groups.append((key, nz[np.asarray(poss)]))
+        for (spc, dpc, mb, rl), rows_g in groups:
+            src_proto = CODE_PROTO[spc]
+            dst_proto = CODE_PROTO[dpc]
+            src_rules = rules_for(src_proto, bus_width)
+            dst_rules = rules_for(dst_proto, bus_width)
+            src_is_gen = src_proto in GENERATOR_PROTOCOLS
+
+            cap = mb or 0
+            for r in ((dst_rules,) if src_is_gen
+                      else (src_rules, dst_rules)):
+                if r.max_burst_bytes:
+                    cap = min(cap, r.max_burst_bytes) if cap \
+                        else r.max_burst_bytes
+            if rl:
+                cap = min(cap, rl) if cap else rl
+
+            pow2 = (dst_rules.pow2_only or
+                    (not src_is_gen and src_rules.pow2_only))
+            if pow2:
+                # data-dependent alignment walk — scalar reference per row
+                frow, foff, flen = [], [], []
+                for r in rows_g.tolist():
+                    t = Transfer1D(
+                        src_addr=int(batch.src_addr[r]),
+                        dst_addr=int(batch.dst_addr[r]),
+                        length=int(batch.length[r]),
+                        src_protocol=src_proto, dst_protocol=dst_proto,
+                        options=batch.option_for(r))
+                    for b in legalize(t, bus_width=bus_width):
+                        frow.append(r)
+                        foff.append(b.dst_addr - t.dst_addr)
+                        flen.append(b.length)
+                out_row.append(np.asarray(frow, dtype=np.int64))
+                out_off.append(np.asarray(foff, dtype=np.int64))
+                out_len.append(np.asarray(flen, dtype=np.int64))
+                continue
+
+            p_src = 0 if src_is_gen else src_rules.page_size
+            p_dst = dst_rules.page_size
+            length = batch.length[rows_g]
+            if p_src or p_dst:
+                lrow, start, seg = _boundary_segments(
+                    batch.src_addr[rows_g], batch.dst_addr[rows_g],
+                    length, p_src, p_dst)
+            else:
+                lrow = np.arange(rows_g.shape[0], dtype=np.int64)
+                start = np.zeros_like(length)
+                seg = length
+            lrow, off, ln = _chunk_segments(lrow, start, seg, cap)
+            out_row.append(rows_g[lrow])
+            out_off.append(off)
+            out_len.append(ln)
+
+    if not out_row:
+        return batch.rewrite(np.empty(0, dtype=np.int64),
+                             np.empty(0, dtype=np.int64),
+                             np.empty(0, dtype=np.int64))
+    row = np.concatenate(out_row)
+    off = np.concatenate(out_off)
+    ln = np.concatenate(out_len)
+    order = np.lexsort((off, row))        # global order: (input row, offset)
+    return batch.rewrite(row[order], off[order], ln[order])
 
 
 def legal_latency(num_midends: int, has_legalizer: bool = True,

@@ -26,8 +26,10 @@ from __future__ import annotations
 import itertools
 from typing import Iterator, List, Sequence, Tuple
 
-from .descriptor import (NdTransfer, RtConfig, TensorDim, Transfer1D,
-                         total_bytes)
+import numpy as np
+
+from .descriptor import (PROTO_CODE, DescriptorBatch, NdTransfer, RtConfig,
+                         TensorDim, Transfer1D, total_bytes)
 
 
 # --------------------------------------------------------------------------
@@ -90,6 +92,47 @@ def tensor_nd(nd: NdTransfer, coalesce: bool = True) -> List[Transfer1D]:
     return list(iter_tensor_nd(nd, coalesce=coalesce))
 
 
+def tensor_nd_batch(nd: NdTransfer, coalesce: bool = True
+                    ) -> DescriptorBatch:
+    """Vectorized `tensor_nd`: the full N-D walk as one address computation.
+
+    Row j of the result equals element j of `tensor_nd(nd)` (dims[0] varies
+    fastest); each emitted 1-D transfer is its own owner, matching how the
+    simulator treats a materialized descriptor list.
+    """
+    if coalesce:
+        nd = coalesce_nd(nd)
+    if not nd.dims:
+        if not nd.inner_length:
+            return DescriptorBatch.empty()
+        return DescriptorBatch.from_transfers([nd.as_1d()])
+    reps = [d.reps for d in nd.dims]
+    total = 1
+    for r in reps:
+        total *= r
+    idx = np.arange(total, dtype=np.int64)
+    src_off = np.zeros(total, dtype=np.int64)
+    dst_off = np.zeros(total, dtype=np.int64)
+    period = 1
+    for d, r in zip(nd.dims, reps):
+        k = (idx // period) % r
+        src_off += k * d.src_stride
+        dst_off += k * d.dst_stride
+        period *= r
+    return DescriptorBatch.from_arrays(
+        src_addr=nd.src_addr + src_off,
+        dst_addr=nd.dst_addr + dst_off,
+        length=np.full(total, nd.inner_length, dtype=np.int64),
+        src_proto=PROTO_CODE[nd.src_protocol],
+        dst_proto=PROTO_CODE[nd.dst_protocol],
+        owner=idx,
+        transfer_id=np.full(total, nd.transfer_id, dtype=np.int64),
+        max_burst=np.full(total, nd.options.max_burst, dtype=np.int64),
+        reduce_len=np.full(total, nd.options.reduce_len, dtype=np.int64),
+        options=nd.options,       # broadcast — O(1) through every rewrite
+    )
+
+
 def tensor_2d(base_src: int, base_dst: int, inner_length: int,
               src_stride: int, dst_stride: int, reps: int,
               **kw) -> List[Transfer1D]:
@@ -132,6 +175,31 @@ def mp_split(transfer: Transfer1D, boundary: int,
     return out
 
 
+def mp_split_batch(batch: DescriptorBatch, boundary: int,
+                   which: str = "dst") -> DescriptorBatch:
+    """Vectorized `mp_split` over every row of a batch: no emitted row
+    crosses a `boundary`-aligned address on the chosen port(s).  Output is
+    grouped by input row in input order (zero-length rows drop, as in the
+    scalar walk)."""
+    if boundary <= 0 or (boundary & (boundary - 1)):
+        raise ValueError(
+            f"boundary must be a positive power of two, got {boundary}")
+    if which not in ("src", "dst", "both"):
+        raise ValueError(f"unknown mp_split port {which!r}")
+    from .legalizer import _boundary_segments
+    nz = np.nonzero(batch.length > 0)[0]
+    if nz.shape[0] == 0:
+        return batch.rewrite(np.empty(0, dtype=np.int64),
+                             np.empty(0, dtype=np.int64),
+                             np.empty(0, dtype=np.int64))
+    p_src = boundary if which in ("src", "both") else 0
+    p_dst = boundary if which in ("dst", "both") else 0
+    row, start, seg = _boundary_segments(
+        batch.src_addr[nz], batch.dst_addr[nz], batch.length[nz],
+        p_src, p_dst)
+    return batch.rewrite(nz[row], start, seg)
+
+
 # --------------------------------------------------------------------------
 # mp_dist — distribute over downstream ports
 # --------------------------------------------------------------------------
@@ -158,6 +226,23 @@ def mp_dist(transfers: Sequence[Transfer1D], num_ports: int,
         addr = t.dst_addr if which == "dst" else t.src_addr
         ports[(addr // boundary) % num_ports].append(t)
     return ports
+
+
+def mp_dist_batch(batch: DescriptorBatch, num_ports: int,
+                  scheme: str = "address", boundary: int = 0,
+                  which: str = "dst") -> List[DescriptorBatch]:
+    """Vectorized `mp_dist`: route rows to ports by address window or
+    round-robin; row order inside each port matches the scalar version."""
+    if scheme == "round_robin":
+        pos = np.arange(len(batch), dtype=np.int64)
+        return [batch.select(pos % num_ports == p) for p in range(num_ports)]
+    if scheme != "address":
+        raise ValueError(f"unknown mp_dist scheme {scheme!r}")
+    if boundary <= 0:
+        raise ValueError("address scheme needs the split boundary")
+    addr = batch.dst_addr if which == "dst" else batch.src_addr
+    port = (addr // boundary) % num_ports
+    return [batch.select(port == p) for p in range(num_ports)]
 
 
 def mp_dist_tree(transfers: Sequence[Transfer1D], num_ports: int,
@@ -211,6 +296,11 @@ def rt_schedule(cfg: RtConfig, nd: NdTransfer, horizon: int
     """Launch times (cycle, transfer) of the real-time mid-end within
     `horizon` cycles.  The engine re-launches the same 3-D transfer every
     `cfg.period` cycles, `cfg.num_launches` times (0 = unbounded)."""
+    # RtConfig validates at construction, but duck-typed configs reach this
+    # loop too — a non-positive period with num_launches == 0 never
+    # terminates, so reject it here as well.
+    if cfg.period <= 0:
+        raise ValueError(f"rt period must be positive, got {cfg.period}")
     out: List[Tuple[int, NdTransfer]] = []
     t = 0
     n = 0

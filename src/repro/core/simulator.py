@@ -29,11 +29,14 @@ The model is O(#bursts), so the full Fig. 14 sweep runs in milliseconds.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
-from .descriptor import Protocol, Transfer1D
-from .legalizer import legal_latency, legalize
+import numpy as np
+
+from .descriptor import PROTO_CODE, DescriptorBatch, Protocol, Transfer1D
+from .legalizer import legal_latency, legalize, legalize_batch
 
 
 @dataclass(frozen=True)
@@ -134,10 +137,35 @@ def _beats(t: Transfer1D, width: int) -> int:
     return (head + t.length + width - 1) // width
 
 
+def beats_array(src_addr: np.ndarray, length: np.ndarray, width: int
+                ) -> np.ndarray:
+    """Vectorized `_beats` — the single definition of the beat-count rule
+    for the batch paths (shared with `analytics.burst_profile`)."""
+    head = src_addr % width
+    return np.where(length == 0, 0, (head + length + width - 1) // width)
+
+
 def simulate(transfers: Sequence[Transfer1D], cfg: EngineConfig,
              src: MemSystem, dst: MemSystem,
              already_legal: bool = False) -> SimResult:
-    """Run the transport-layer model over a descriptor list."""
+    """Run the transport-layer model over a descriptor list.
+
+    Thin adapter over the structure-of-arrays hot path (`simulate_batch`);
+    `simulate_reference` keeps the original per-object walk as the oracle
+    the batch path is property-tested against.
+    """
+    return simulate_batch(DescriptorBatch.from_transfers(transfers), cfg,
+                          src, dst, already_legal=already_legal)
+
+
+def simulate_reference(transfers: Sequence[Transfer1D], cfg: EngineConfig,
+                       src: MemSystem, dst: MemSystem,
+                       already_legal: bool = False) -> SimResult:
+    """Scalar reference implementation (one `Transfer1D` object per burst).
+
+    Kept verbatim as the equivalence oracle for `simulate_batch` and as the
+    object-path baseline timed by `benchmarks/descriptor_plane_bench.py`.
+    """
     bursts: List[Transfer1D] = []
     launch_of: List[int] = []     # index of owning descriptor per burst
     for di, t in enumerate(transfers):
@@ -221,22 +249,232 @@ def simulate(transfers: Sequence[Transfer1D], cfg: EngineConfig,
     ).with_width(width)
 
 
+_INIT_CODE = PROTO_CODE[Protocol.INIT]
+
+
+def simulate_batch(batch: DescriptorBatch, cfg: EngineConfig,
+                   src: MemSystem, dst: MemSystem,
+                   already_legal: bool = False) -> SimResult:
+    """Structure-of-arrays transport-layer model — the hot path.
+
+    Cycle-identical to `simulate_reference` over the equivalent object list
+    (asserted by property tests).  Everything data-parallel — beat counts,
+    contention-stretched burst durations (prefix sums), buffer-lag windows,
+    descriptor launch times — is computed as whole-array NumPy expressions
+    up front; only the irreducible burst recurrence (each term depends on
+    earlier bursts through the o_r / NAx / o_w credit windows) runs as one
+    tight scalar loop over those precomputed buffers.  No descriptor
+    objects, no dict lookups, no per-burst legalizer calls.
+
+    `already_legal=True` mirrors the reference semantics exactly: every row
+    is taken as one pre-legalized burst that is its own descriptor.
+    """
+    useful = batch.total_bytes
+    if already_legal:
+        bursts = batch
+        per_row_desc = True
+    else:
+        if batch.options is not None:
+            # the numeric columns fully determine legalization; drop the
+            # per-row options objects so the burst rewrite stays pure-array
+            batch = dataclasses.replace(batch, options=None)
+        bursts = legalize_batch(batch, bus_width=cfg.bus_width)
+        per_row_desc = False
+
+    n = len(bursts)
+    if n == 0:
+        return SimResult(0, 0, 0, cfg.launch_latency,
+                         0).with_width(cfg.bus_width)
+
+    width = cfg.bus_width
+    nax = max(1, cfg.n_outstanding)
+    o_r = max(1, src.outstanding)
+    o_w = max(1, dst.outstanding)
+    is_gen = int(bursts.src_proto[0]) == _INIT_CODE
+    rlat = 0 if is_gen else src.latency
+    wlat = dst.wlat
+    config = cfg.config_cycles
+    latency = cfg.launch_latency
+    decoupled = cfg.decoupled
+    exclusive = cfg.exclusive_transfers
+
+    beats = beats_array(bursts.src_addr, bursts.length, width)
+    total_beats = int(beats.sum())
+
+    def stretched(mem: MemSystem) -> np.ndarray:
+        # data-phase durations incl. contention stalls, via prefix sums
+        # (the shifted-view form of MemSystem.stretched's cumulative rule)
+        p = mem.contention_period
+        if p <= 0:
+            return beats
+        cum = np.cumsum(beats)
+        before = cum - beats
+        return beats + cum // p - before // p
+
+    buf = max(1, cfg.buffer_beats)
+    beats_l = beats.tolist()
+    rdur = stretched(src)
+    wdur = stretched(dst)
+    rdur = beats_l if rdur is beats else rdur.tolist()
+    wdur = beats_l if wdur is beats else wdur.tolist()
+    lag = np.maximum(1, buf // np.maximum(beats, 1)).tolist()
+
+    # Descriptor-accept chain: one new acceptance per owning descriptor.
+    if per_row_desc:
+        new_desc_arr = np.ones(n, dtype=bool)
+    else:
+        own = bursts.owner
+        new_desc_arr = np.empty(n, dtype=bool)
+        new_desc_arr[0] = True
+        new_desc_arr[1:] = own[1:] != own[:-1]
+    if exclusive:
+        # launch times depend on completion of the previous descriptor —
+        # resolved inside the recurrence loop below
+        launch = None
+        new_desc = new_desc_arr.tolist()
+    else:
+        # non-exclusive engines accept one descriptor per cycle: launch
+        # times are a pure function of the descriptor rank (shifted view)
+        rank = np.cumsum(new_desc_arr) - 1
+        launch = (rank * (config + 1) + config + latency).tolist()
+        new_desc = None
+
+    # History buffers, front-padded with zeros so every credit /
+    # backpressure lookback (o_r, NAx, o_w, buffer lag <= buf) lands on a
+    # valid "no constraint" slot — the loop body carries no window guards.
+    pad = max(o_r, nax, o_w, buf)
+    size = pad + n
+    rend = [0] * size
+    wstart = [0] * size
+    wend = [0] * size
+    wcomp = [0] * size
+
+    req_prev = -1
+    rend_prev = 0
+    wend_prev = 0
+    accept = 0
+    cur_launch = 0
+    # Every path issues the first read request `config + latency` cycles in
+    # (rank-0 launch; no credit term can bind at burst 0).
+    first_req = config + latency
+    j = pad                       # write cursor = i + pad
+    for i in range(n):
+        if launch is not None:
+            r = launch[i]
+        else:
+            if new_desc[i]:
+                v = wcomp[j - 1]
+                if v > accept:
+                    accept = v
+                cur_launch = accept + config + latency
+                accept += config + 1
+            r = cur_launch
+        v = req_prev + 1
+        if v > r:
+            r = v
+        v = rend[j - o_r]             # endpoint request credit
+        if v > r:
+            r = v
+        v = wend[j - nax]             # engine tracking slot
+        if v > r:
+            r = v
+        req_prev = r
+
+        rs = r + rlat
+        if rend_prev > rs:
+            rs = rend_prev
+        v = wstart[j - lag[i]]        # dataflow-element backpressure
+        if v > rs:
+            rs = v
+        re = rs + rdur[i]
+        rend[j] = re
+        rend_prev = re
+
+        ws = rs + 1 if decoupled else re
+        if wend_prev > ws:
+            ws = wend_prev
+        v = wcomp[j - o_w]
+        if v > ws:
+            ws = v
+        wstart[j] = ws
+        we = ws + wdur[i]
+        wend[j] = we
+        wend_prev = we
+        wcomp[j] = we + wlat
+        j += 1
+
+    return SimResult(
+        cycles=wend_prev,
+        useful_bytes=useful,
+        bus_beats=total_beats,
+        first_read_req=first_req,
+        n_bursts=n,
+    ).with_width(width)
+
+
 # --------------------------------------------------------------------------
 # Paper experiment drivers
 # --------------------------------------------------------------------------
+
+def _fragment_lengths(total_bytes: int, fragment: int):
+    """(number of full fragments, tail bytes) covering exactly
+    `total_bytes` — a trailing short descriptor instead of silently
+    dropping the `total_bytes % fragment` remainder."""
+    if fragment <= 0:
+        raise ValueError(f"fragment must be positive, got {fragment}")
+    n_full, tail = divmod(total_bytes, fragment)
+    return n_full, tail
+
+
+def make_fragmented_batch(total_bytes: int, fragment: int,
+                          src_protocol: Protocol = Protocol.AXI4,
+                          dst_protocol: Protocol = Protocol.AXI4
+                          ) -> DescriptorBatch:
+    """The §4.4 fragmented-copy descriptor stream as a `DescriptorBatch`,
+    built with array ops — no per-descriptor objects."""
+    n_full, tail = _fragment_lengths(total_bytes, fragment)
+    n = n_full + (1 if tail else 0)
+    addr = np.arange(n, dtype=np.int64) * fragment
+    length = np.full(n, fragment, dtype=np.int64)
+    if tail:
+        length[-1] = tail
+    return DescriptorBatch.from_arrays(
+        src_addr=addr, dst_addr=addr, length=length,
+        src_protocol=src_protocol, dst_protocol=dst_protocol)
+
 
 def fragmented_copy(total_bytes: int, fragment: int, cfg: EngineConfig,
                     src: MemSystem, dst: MemSystem,
                     src_protocol: Protocol = Protocol.AXI4,
                     dst_protocol: Protocol = Protocol.AXI4) -> SimResult:
     """Paper §4.4: copy `total_bytes` fragmented into `fragment`-byte
-    descriptors (1 B .. 1 KiB sweep)."""
-    n = max(1, total_bytes // fragment)
+    descriptors (1 B .. 1 KiB sweep), with a final short descriptor when
+    `total_bytes` is not a fragment multiple.  Runs on the batch path."""
+    batch = make_fragmented_batch(total_bytes, fragment,
+                                  src_protocol, dst_protocol)
+    return simulate_batch(batch, cfg, src, dst)
+
+
+def fragmented_copy_reference(total_bytes: int, fragment: int,
+                              cfg: EngineConfig, src: MemSystem,
+                              dst: MemSystem,
+                              src_protocol: Protocol = Protocol.AXI4,
+                              dst_protocol: Protocol = Protocol.AXI4
+                              ) -> SimResult:
+    """Object-path `fragmented_copy`: one frozen `Transfer1D` per fragment
+    through `simulate_reference`.  The baseline the descriptor-plane
+    benchmark times the batch path against."""
+    n_full, tail = _fragment_lengths(total_bytes, fragment)
     ts = [Transfer1D(src_addr=i * fragment, dst_addr=i * fragment,
                      length=fragment, src_protocol=src_protocol,
                      dst_protocol=dst_protocol)
-          for i in range(n)]
-    return simulate(ts, cfg, src, dst)
+          for i in range(n_full)]
+    if tail:
+        ts.append(Transfer1D(src_addr=n_full * fragment,
+                             dst_addr=n_full * fragment, length=tail,
+                             src_protocol=src_protocol,
+                             dst_protocol=dst_protocol))
+    return simulate_reference(ts, cfg, src, dst)
 
 
 def utilization_sweep(cfg: EngineConfig, mem: MemSystem,

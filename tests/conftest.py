@@ -1,3 +1,4 @@
+import importlib.util
 import os
 import subprocess
 import sys
@@ -6,6 +7,24 @@ import textwrap
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Skip collecting test modules whose hard dependencies are not present in
+# this build, instead of aborting the whole run at collection time.
+def _have(module: str) -> bool:
+    try:
+        return importlib.util.find_spec(module) is not None
+    except ModuleNotFoundError:   # parent package itself not importable
+        return False
+
+
+collect_ignore = []
+if not _have("hypothesis"):
+    collect_ignore += ["test_legalizer.py", "test_midend.py",
+                       "test_property_system.py"]
+if not _have("repro.dist"):
+    collect_ignore += ["test_archs_smoke.py", "test_checkpoint.py",
+                       "test_serve.py", "test_sharding_dist.py",
+                       "test_train_fault.py"]
 
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600

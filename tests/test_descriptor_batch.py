@@ -1,0 +1,297 @@
+"""SoA/object-path equivalence property tests.
+
+The structure-of-arrays descriptor plane (`DescriptorBatch`,
+`legalize_batch`, `tensor_nd_batch`, `mp_split_batch`, `mp_dist_batch`,
+`simulate_batch`) must be byte-identical / cycle-identical to the scalar
+object path it replaced.  Randomized (seeded, hypothesis-free) sweeps over
+all protocols, misaligned addresses, zero-length descriptors and every
+engine-configuration axis assert exactly that.
+"""
+
+import random
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import (HBM, PULP_L2, RPC_DRAM, SRAM, BackendOptions,
+                        DescriptorBatch, EngineConfig, IDMAEngine,
+                        MemoryMap, NdTransfer, Protocol, TensorDim,
+                        Transfer1D, check_legal, fragmented_copy,
+                        fragmented_copy_reference, legalize, legalize_batch,
+                        make_fragmented_batch, mp_dist, mp_dist_batch,
+                        mp_split, mp_split_batch, rt_schedule, simulate,
+                        simulate_batch, simulate_reference, tensor_nd,
+                        tensor_nd_batch, xilinx_baseline_config)
+from repro.core.analytics import burst_profile
+from repro.core.simulator import PULP_TCDM
+
+PROTOS = [Protocol.AXI4, Protocol.AXI_LITE, Protocol.AXI_STREAM,
+          Protocol.OBI, Protocol.TILELINK, Protocol.HBM, Protocol.VMEM]
+
+CONFIGS = [
+    EngineConfig(bus_width=4),
+    EngineConfig(bus_width=8, n_outstanding=8),
+    EngineConfig(bus_width=8, decoupled=False),
+    EngineConfig(bus_width=4, n_outstanding=16, config_cycles=9,
+                 num_midends=1, tensor_nd_zero_latency=True),
+    EngineConfig(bus_width=64, n_outstanding=32, buffer_beats=64),
+    xilinx_baseline_config(),          # exclusive + store-and-forward
+]
+MEMS = [SRAM, RPC_DRAM, HBM, PULP_L2, PULP_TCDM]
+
+
+def rand_transfer(rng, allow_init=True, tid=0):
+    sp = rng.choice(PROTOS + ([Protocol.INIT] if allow_init else []))
+    dp = rng.choice(PROTOS)
+    opts = BackendOptions(
+        max_burst=rng.choice([0, 0, 0, 7, 64, 1000]),
+        reduce_len=rng.choice([0, 0, 33]))
+    length = rng.choice([0, 1, 3, 17, 255, 4096, 10000,
+                         rng.randrange(20000)])
+    return Transfer1D(rng.randrange(0, 1 << 34), rng.randrange(0, 1 << 34),
+                      length, sp, dp, options=opts, transfer_id=tid)
+
+
+class TestLegalizeBatchEquivalence:
+    def test_randomized_all_protocols(self):
+        rng = random.Random(1)
+        for trial in range(60):
+            ts = [rand_transfer(rng, tid=i)
+                  for i in range(rng.randrange(1, 14))]
+            obj = [b for t in ts for b in legalize(t, bus_width=8)]
+            bat = legalize_batch(DescriptorBatch.from_transfers(ts),
+                                 bus_width=8)
+            assert bat.to_transfers() == obj, f"trial {trial}"
+            check_legal(bat.to_transfers(), 8)
+
+    def test_owner_maps_bursts_to_input_rows(self):
+        ts = [Transfer1D(0, 0, 10000), Transfer1D(0, 0, 0),
+              Transfer1D(5, 5, 3)]
+        bat = legalize_batch(DescriptorBatch.from_transfers(ts), 8)
+        owners = np.unique(bat.owner)
+        assert owners.tolist() == [0, 2]        # zero-length row dropped
+        assert int(bat.length[bat.owner == 0].sum()) == 10000
+
+    def test_misaligned_page_straddle(self):
+        t = Transfer1D(4096 - 1, 2 * 4096 - 3, 4096 + 7)
+        obj = legalize(t, bus_width=8)
+        bat = legalize_batch(DescriptorBatch.from_transfers([t]), 8)
+        assert bat.to_transfers() == obj
+
+    def test_empty_and_zero_length(self):
+        assert len(legalize_batch(DescriptorBatch.empty(), 8)) == 0
+        z = DescriptorBatch.from_transfers([Transfer1D(1, 2, 0)])
+        assert len(legalize_batch(z, 8)) == 0
+
+
+class TestMidendBatchEquivalence:
+    def test_tensor_nd_randomized(self):
+        rng = random.Random(2)
+        for trial in range(40):
+            dims = tuple(
+                TensorDim(rng.randrange(0, 500), rng.randrange(0, 500),
+                          rng.randrange(1, 5))
+                for _ in range(rng.randrange(0, 4)))
+            nd = NdTransfer(rng.randrange(1000), rng.randrange(1000),
+                            rng.choice([0, 5, 64]), dims,
+                            transfer_id=trial,
+                            options=BackendOptions(max_burst=16))
+            assert tensor_nd_batch(nd).to_transfers() == tensor_nd(nd), \
+                f"trial {trial}"
+
+    def test_tensor_nd_dense_coalesces_to_one_row(self):
+        nd = NdTransfer(0, 0, 64, (TensorDim(64, 64, 4),
+                                   TensorDim(256, 256, 8)))
+        bat = tensor_nd_batch(nd)
+        assert len(bat) == 1 and int(bat.length[0]) == 64 * 4 * 8
+
+    def test_mp_split_randomized(self):
+        rng = random.Random(3)
+        for trial in range(40):
+            ts = [rand_transfer(rng, allow_init=False, tid=i)
+                  for i in range(rng.randrange(1, 6))]
+            bnd = 1 << rng.randrange(4, 13)
+            which = rng.choice(["src", "dst", "both"])
+            obj = [b for t in ts for b in mp_split(t, bnd, which=which)]
+            bat = mp_split_batch(DescriptorBatch.from_transfers(ts), bnd,
+                                 which=which)
+            assert bat.to_transfers() == obj, f"trial {trial}"
+
+    def test_mp_dist_randomized(self):
+        rng = random.Random(4)
+        for trial in range(30):
+            ts = [rand_transfer(rng, allow_init=False)
+                  for _ in range(rng.randrange(1, 20))]
+            ports = rng.choice([2, 4, 8])
+            bnd = 1 << rng.randrange(6, 12)
+            scheme = rng.choice(["address", "round_robin"])
+            obj = mp_dist(ts, ports, scheme=scheme, boundary=bnd)
+            bat = mp_dist_batch(DescriptorBatch.from_transfers(ts), ports,
+                                scheme=scheme, boundary=bnd)
+            assert [p.to_transfers() for p in bat] == obj, f"trial {trial}"
+
+
+class TestSimulateBatchEquivalence:
+    def test_randomized_cycles_identical(self):
+        rng = random.Random(5)
+        for trial in range(80):
+            ts = [rand_transfer(rng, tid=i)
+                  for i in range(rng.randrange(1, 12))]
+            cfg = rng.choice(CONFIGS)
+            s, d = rng.choice(MEMS), rng.choice(MEMS)
+            ra = simulate_reference(ts, cfg, s, d)
+            rb = simulate(ts, cfg, s, d)
+            assert (ra.cycles, ra.useful_bytes, ra.bus_beats,
+                    ra.first_read_req, ra.n_bursts) == \
+                   (rb.cycles, rb.useful_bytes, rb.bus_beats,
+                    rb.first_read_req, rb.n_bursts), f"trial {trial}"
+
+    def test_already_legal_per_row_descriptors(self):
+        rng = random.Random(6)
+        for trial in range(30):
+            ts = [rand_transfer(rng, tid=i) for i in range(5)]
+            cfg = rng.choice(CONFIGS)
+            legal = [b for t in ts for b in legalize(t, cfg.bus_width)]
+            if not legal:
+                continue
+            ra = simulate_reference(legal, cfg, SRAM, SRAM,
+                                    already_legal=True)
+            rb = simulate_batch(DescriptorBatch.from_transfers(legal), cfg,
+                                SRAM, SRAM, already_legal=True)
+            assert (ra.cycles, ra.first_read_req) == \
+                   (rb.cycles, rb.first_read_req), f"trial {trial}"
+
+    def test_engine_simulate_matches_object_lowering(self):
+        """The engine's multi-stage batch pipeline must time identically
+        to hand-lowering on the object path."""
+        eng = IDMAEngine(num_backends=4, backend_boundary=256)
+        nd = NdTransfer(0, 0, 64, (TensorDim(256, 64, 40),))
+        got = eng.simulate(nd)
+        split = [s for o in tensor_nd(nd)
+                 for s in mp_split(o, 256, which="dst")]
+        ports = mp_dist(split, 4, scheme="address", boundary=256,
+                        which="dst")
+        legal_ports = [
+            [b for t in port for b in legalize(t, bus_width=eng.bus_width)]
+            for port in ports]
+        assert got.n_bursts == sum(len(p) for p in legal_ports)
+        want = max(
+            simulate_reference(p, eng.sim_config, eng.src_system,
+                               eng.dst_system, already_legal=True).cycles
+            for p in legal_ports if p)
+        assert got.cycles == want
+
+    def test_init_generator_source(self):
+        ts = [Transfer1D(0, i * 64, 64, Protocol.INIT, Protocol.OBI)
+              for i in range(10)]
+        for cfg in CONFIGS:
+            ra = simulate_reference(ts, cfg, SRAM, SRAM)
+            rb = simulate(ts, cfg, SRAM, SRAM)
+            assert ra.cycles == rb.cycles
+
+
+class TestFragmentedTail:
+    def test_tail_not_dropped(self):
+        cfg = EngineConfig(bus_width=4)
+        r = fragmented_copy(1000, 300, cfg, SRAM, SRAM)
+        assert r.useful_bytes == 1000
+        rr = fragmented_copy_reference(1000, 300, cfg, SRAM, SRAM)
+        assert rr.useful_bytes == 1000 and rr.cycles == r.cycles
+
+    def test_exact_multiple_unchanged(self):
+        b = make_fragmented_batch(1024, 256)
+        assert len(b) == 4 and int(b.length.sum()) == 1024
+
+    def test_total_smaller_than_fragment(self):
+        b = make_fragmented_batch(10, 256)
+        assert len(b) == 1 and int(b.length[0]) == 10
+
+    def test_bad_fragment_raises(self):
+        with pytest.raises(ValueError):
+            make_fragmented_batch(1024, 0)
+
+
+class TestRtScheduleGuard:
+    def test_duck_typed_zero_period_raises(self):
+        cfg = types.SimpleNamespace(period=0, num_launches=0, bypass=False)
+        nd = NdTransfer(0, 0, 64)
+        with pytest.raises(ValueError):
+            rt_schedule(cfg, nd, horizon=100)
+
+    def test_valid_schedule_unchanged(self):
+        from repro.core import RtConfig
+        out = rt_schedule(RtConfig(period=10, num_launches=3),
+                          NdTransfer(0, 0, 64), horizon=100)
+        assert [t for t, _ in out] == [0, 10, 20]
+
+
+class TestBatchPlumbing:
+    def test_round_trip_preserves_options_and_ids(self):
+        opts = BackendOptions(max_burst=32, init_value=7)
+        ts = [Transfer1D(1, 2, 3, options=opts, transfer_id=9)]
+        back = DescriptorBatch.from_transfers(ts).to_transfers()
+        assert back == ts and back[0].options is opts
+
+    def test_functional_engine_still_moves_bytes(self):
+        mem = MemoryMap.create({Protocol.AXI4: 1 << 14,
+                                Protocol.OBI: 1 << 14})
+        eng = IDMAEngine(mem=mem, num_backends=2, backend_boundary=512)
+        data = np.random.default_rng(0).integers(
+            0, 256, 4096, dtype=np.uint8)
+        mem.spaces[Protocol.AXI4][:4096] = data
+        eng.submit(Transfer1D(0, 0, 4096, Protocol.AXI4, Protocol.OBI))
+        assert np.array_equal(mem.spaces[Protocol.OBI][:4096], data)
+
+    def test_burst_profile(self):
+        b = legalize_batch(make_fragmented_batch(4096, 64), 8)
+        p = burst_profile(b, bus_width=8)
+        assert p["bytes"] == 4096 and p["n_bursts"] == len(b)
+        assert 0 < p["shifter_efficiency"] <= 1.0
+
+    def test_concat_rebases_owners(self):
+        from repro.core import concat_batches
+        t1 = Transfer1D(0, 0, 64)
+        t2 = Transfer1D(64, 64, 64)
+        cat = concat_batches([DescriptorBatch.from_transfers([t1]),
+                              DescriptorBatch.from_transfers([t2])])
+        assert np.unique(cat.owner).shape[0] == 2
+        cfg = EngineConfig(bus_width=8, exclusive_transfers=True,
+                           config_cycles=3)
+        assert simulate_batch(cat, cfg, SRAM, SRAM).cycles == \
+            simulate_reference([t1, t2], cfg, SRAM, SRAM).cycles
+
+    def test_broadcast_options_survive_nd_lowering(self):
+        opts = BackendOptions(max_burst=32, init_value=5)
+        nd = NdTransfer(0, 0, 64, (TensorDim(128, 64, 4),), options=opts)
+        lowered = tensor_nd_batch(nd)
+        assert lowered.options is opts           # O(1) broadcast, no tuple
+        legal = legalize_batch(lowered, 8)
+        assert all(t.options is opts for t in legal.to_transfers())
+
+    def test_from_arrays_derives_caps_from_options(self):
+        b = DescriptorBatch.from_arrays(
+            src_addr=np.array([0]), dst_addr=np.array([0]),
+            length=np.array([1024]),
+            options=BackendOptions(max_burst=64))
+        got = legalize_batch(b, 8).to_transfers()
+        assert got == legalize(b.to_transfers()[0], 8) and len(got) == 16
+        per_row = DescriptorBatch.from_arrays(
+            src_addr=np.array([0, 0]), dst_addr=np.array([0, 0]),
+            length=np.array([256, 256]),
+            options=[BackendOptions(max_burst=64), BackendOptions()])
+        assert per_row.max_burst.tolist() == [64, 0]
+
+    def test_doorbell_ring_rejects_corrupt_protocol_codes(self):
+        import struct
+        from repro.core import DescFrontend
+        eng = IDMAEngine()
+        spm = bytearray(64)
+        spm[0:40] = struct.pack("<QQQQII", 0xFFFF_FFFF_FFFF_FFFF,
+                                0, 0, 64, 200, 1)   # sp=200 is no protocol
+        fe = DescFrontend(eng, spm)
+        with pytest.raises(ValueError):
+            fe.doorbell_ring(0, 1)
+        with pytest.raises(ValueError):
+            fe.doorbell_ring(-8, 1)
+        assert fe.fetches == 0

@@ -118,6 +118,8 @@ class TestFlashAttention:
 
     def test_chunked_flash_xla_path(self):
         """The XLA-path scan implementation == oracle (incl. SWA+softcap)."""
+        pytest.importorskip(
+            "repro.dist", reason="models.attention needs repro.dist")
         from repro.kernels.flash_attention.ref import attention_ref
         from repro.models.attention import chunked_flash
         q, k, v = (arr((2, 4, 300, 64), scale=0.5) for _ in range(3))
