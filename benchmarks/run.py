@@ -27,6 +27,7 @@ SUITES = [
     ("latency", "§4.3"),
     ("workload_speedup", "§3.4 / §3.5 (Fig. 11)"),
     ("descriptor_plane", "SoA vs object descriptor hot path"),
+    ("channel_sweep", "multi-channel aggregate bandwidth (§4 concurrency)"),
     ("kernel_bench", "kernels + TPU rooflines"),
     ("roofline", "dry-run roofline table"),
 ]
@@ -81,6 +82,13 @@ def main() -> None:
                         descriptor_plane_bench.LAST)
             except Exception:
                 pass          # import-time failure already in suite_errors
+        if "channel_sweep" in wall or "channel_sweep" in errors:
+            try:
+                from benchmarks import channel_sweep
+                if channel_sweep.LAST:
+                    payload["channel_sweep"] = dict(channel_sweep.LAST)
+            except Exception:
+                pass
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -21,12 +21,14 @@ from .midend import (coalesce_nd, iter_tensor_nd, mp_dist, mp_dist_batch,
 from .frontend import (DescFrontend, InstFrontend, RegFrontend, write_chain)
 from .backend import (MemoryMap, TransferError, execute, init_stream,
                       splitmix32, splitmix64)
-from .engine import (ErrorPolicy, IDMAEngine, TilePlan, plan_nd_copy)
-from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, EngineConfig,
-                        MemSystem, SimResult, cheshire_idma_config,
-                        fragmented_copy, fragmented_copy_reference,
-                        make_fragmented_batch, manticore_idma_config,
-                        pulp_idma_config, simulate, simulate_batch,
+from .engine import (CompletionRecord, ErrorPolicy, IDMAEngine, TilePlan,
+                     plan_nd_copy)
+from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, ChannelSimResult,
+                        EngineConfig, MemSystem, SimResult,
+                        cheshire_idma_config, fragmented_copy,
+                        fragmented_copy_reference, make_fragmented_batch,
+                        manticore_idma_config, pulp_idma_config, simulate,
+                        simulate_batch, simulate_channels,
                         simulate_reference, utilization_sweep,
                         xilinx_baseline_config)
 from . import analytics, instream
@@ -44,12 +46,13 @@ __all__ = [
     "DescFrontend", "InstFrontend", "RegFrontend", "write_chain",
     "MemoryMap", "TransferError", "execute", "init_stream", "splitmix32",
     "splitmix64",
-    "ErrorPolicy", "IDMAEngine", "TilePlan", "plan_nd_copy",
-    "HBM", "PULP_L2", "RPC_DRAM", "SRAM", "EngineConfig", "MemSystem",
-    "SimResult", "cheshire_idma_config", "fragmented_copy",
-    "fragmented_copy_reference", "make_fragmented_batch",
-    "manticore_idma_config", "pulp_idma_config", "simulate",
-    "simulate_batch", "simulate_reference", "utilization_sweep",
-    "xilinx_baseline_config",
+    "CompletionRecord", "ErrorPolicy", "IDMAEngine", "TilePlan",
+    "plan_nd_copy",
+    "HBM", "PULP_L2", "RPC_DRAM", "SRAM", "ChannelSimResult",
+    "EngineConfig", "MemSystem", "SimResult", "cheshire_idma_config",
+    "fragmented_copy", "fragmented_copy_reference",
+    "make_fragmented_batch", "manticore_idma_config", "pulp_idma_config",
+    "simulate", "simulate_batch", "simulate_channels",
+    "simulate_reference", "utilization_sweep", "xilinx_baseline_config",
     "analytics", "instream",
 ]

@@ -4,10 +4,15 @@ The engine owns:
   * a mid-end chain (callables rewriting descriptor lists),
   * one or more back-end ports (address-boundary-distributed, MemPool
     style, when more than one),
+  * N submission channels with an asynchronous control plane
+    (`submit_async` / `dispatch_batch` → `poll` → `wait_all`) backed by
+    per-channel queues and completion records; the synchronous `submit`
+    is a thin enqueue-then-drain adapter,
   * an error handler with the paper's three verbs: continue / abort /
     replay (§2.3),
   * both execution fabrics: the *functional* one (bytes move through
-    `core.backend`) and the *timing* one (`core.simulator`).
+    `core.backend`) and the *timing* one (`core.simulator` — concurrent
+    channels share endpoints via `simulate_channels`).
 
 It also exposes `plan_nd_copy`, the bridge used by the Pallas kernel layer:
 a `tensor_nd` plan legalized into TPU-tile terms (grid + block shapes),
@@ -16,6 +21,7 @@ which `kernels/copy_engine` consumes to build its `BlockSpec`s.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -24,7 +30,8 @@ import numpy as np
 
 from . import simulator as sim
 from .backend import MemoryMap, TransferError, execute
-from .descriptor import DescriptorBatch, NdTransfer, Transfer1D
+from .descriptor import (DescriptorBatch, NdTransfer, Transfer1D,
+                         concat_batches)
 from .legalizer import legalize_batch, legalize_tile
 from .midend import mp_dist_batch, mp_split_batch, tensor_nd_batch
 
@@ -55,6 +62,25 @@ class EngineStats:
     replays: int = 0
 
 
+@dataclass
+class CompletionRecord:
+    """Submission-queue completion record (Benz et al. 2025 style):
+    one record per `submit_async`/`dispatch_batch` call, covering
+    `count` consecutive transfer ids starting at `tid`.  A sharded
+    dispatch flips to "done" only once every shard (`pending` queue
+    items) has drained; an "error" is terminal."""
+
+    tid: int
+    count: int = 1
+    channel: int = -1            # -1: sharded across channels
+    status: str = "pending"      # "pending" | "done" | "error"
+    bytes_moved: int = 0
+    pending: int = 1             # queue items not yet drained
+
+    def covers(self, tid: int) -> bool:
+        return self.tid <= tid < self.tid + self.count
+
+
 class IDMAEngine:
     """A concrete iDMAE instance."""
 
@@ -69,9 +95,16 @@ class IDMAEngine:
         sim_config: Optional[sim.EngineConfig] = None,
         src_system: sim.MemSystem = sim.SRAM,
         dst_system: sim.MemSystem = sim.SRAM,
+        num_channels: int = 1,
+        channel_scheme: str = "round_robin",
+        channel_boundary: int = 0,
     ) -> None:
         if num_backends > 1 and backend_boundary <= 0:
             raise ValueError("multi-back-end engines need backend_boundary")
+        if num_channels < 1:
+            raise ValueError("num_channels must be >= 1")
+        if channel_scheme == "address" and channel_boundary <= 0:
+            raise ValueError("address channel scheme needs channel_boundary")
         self.mem = mem
         self.midends = list(midends)
         self.num_backends = num_backends
@@ -82,42 +115,205 @@ class IDMAEngine:
             bus_width=bus_width, num_midends=len(self.midends))
         self.src_system = src_system
         self.dst_system = dst_system
+        self.num_channels = num_channels
+        self.channel_scheme = channel_scheme
+        self.channel_boundary = channel_boundary
         self.stats = EngineStats()
         self._next_id = 1
         self._last_completed = 0
         self._fail_at: Optional[int] = None  # fault injection for tests
+        # per-channel submission queues of (first_tid, channel, payload);
+        # payload is a Descriptor or a DescriptorBatch shard
+        self._queues: List[List[Tuple[int, int, object]]] = [
+            [] for _ in range(num_channels)]
+        self._records: List[CompletionRecord] = []   # ascending first tid
+        self._record_starts: List[int] = []          # parallel, for bisect
+        self._rr = 0                                 # round-robin cursor
+        #: timing result of the last `wait_all` drain
+        self.last_channel_result: Optional[sim.ChannelSimResult] = None
 
     # -- front-end interface ------------------------------------------------
 
     def submit(self, transfer: Descriptor) -> int:
+        """Synchronous submission — a thin adapter over the asynchronous
+        queue: enqueue one descriptor, then drain (`wait_all`)."""
+        tid = self.submit_async(transfer)
+        self.wait_all()
+        return tid
+
+    def submit_async(self, transfer: Descriptor,
+                     channel: Optional[int] = None) -> int:
+        """Enqueue a descriptor on a channel's submission queue and return
+        its transfer id immediately — nothing moves until `wait_all`.
+
+        Channel selection is round-robin unless `channel` pins one (the
+        core-private front-end case: one channel per PE).
+        """
         tid = self._next_id
         self._next_id += 1
-        if isinstance(transfer, NdTransfer):
-            transfer = dataclasses.replace(transfer, transfer_id=tid)
-        else:
-            transfer = dataclasses.replace(transfer, transfer_id=tid)
+        transfer = dataclasses.replace(transfer, transfer_id=tid)
+        if channel is None:
+            channel = self._rr
+            self._rr = (self._rr + 1) % self.num_channels
+        elif not 0 <= channel < self.num_channels:
+            raise ValueError(f"channel {channel} out of range "
+                             f"(engine has {self.num_channels})")
         self.stats.submitted += 1
-        self._run(transfer)
-        self._last_completed = tid
-        self.stats.completed += 1
+        self._queues[channel].append((tid, channel, transfer))
+        self._add_record(CompletionRecord(tid=tid, channel=channel))
         return tid
+
+    def dispatch_batch(self, batch: DescriptorBatch) -> List[int]:
+        """Shard a `DescriptorBatch` across the channel submission queues
+        via `mp_dist_batch` (round-robin, or by destination-address window
+        when the engine was built with ``channel_scheme="address"``).
+
+        The batched analogue of `submit_async`: ids are assigned in bulk,
+        one completion record covers the whole dispatch, and the rows move
+        on the next `wait_all`.
+        """
+        n = len(batch)
+        if n == 0:
+            return []
+        ids = list(range(self._next_id, self._next_id + n))
+        self._next_id += n
+        batch = dataclasses.replace(
+            batch, transfer_id=np.arange(ids[0], ids[0] + n, dtype=np.int64))
+        if self.num_channels == 1:
+            shards = [batch]
+        elif self.channel_scheme == "address":
+            shards = mp_dist_batch(batch, self.num_channels,
+                                   scheme="address",
+                                   boundary=self.channel_boundary,
+                                   which="dst")
+        else:
+            shards = mp_dist_batch(batch, self.num_channels,
+                                   scheme=self.channel_scheme)
+        enqueued = 0
+        for c, shard in enumerate(shards):
+            if len(shard):
+                self._queues[c].append((int(shard.transfer_id[0]), c, shard))
+                enqueued += 1
+        self.stats.submitted += n
+        self._add_record(CompletionRecord(tid=ids[0], count=n,
+                                          pending=max(enqueued, 1)))
+        return ids
+
+    def poll(self, tid: int) -> str:
+        """Completion-record lookup: ``"pending"``, ``"done"`` or
+        ``"error"``.  Raises `KeyError` for an id never submitted."""
+        rec = self._record_for(tid)
+        if rec is None:
+            raise KeyError(f"unknown transfer id {tid}")
+        return rec.status
+
+    def wait_all(self) -> sim.ChannelSimResult:
+        """Drain every channel queue: run the timing fabric over the
+        concurrent per-channel streams (`simulate_channels`, shared
+        `src_system`/`dst_system` endpoints), then execute the functional
+        fabric and mark completion records.
+
+        Functional drain order: queue items (single descriptors, or one
+        shard of a `dispatch_batch`) ordered by first transfer id, each
+        item FIFO internally.  As on real multi-channel hardware, rows of
+        a *sharded* dispatch interleave across channels with no
+        cross-channel byte-ordering guarantee — don't dispatch overlapping
+        transfers to different channels and rely on their order.
+
+        Returns the multi-channel timing result (also kept on
+        `last_channel_result`).  On a `TransferError` with the "abort"
+        policy, the failing submission's record flips to ``"error"``,
+        undrained items stay queued, and the error propagates.
+        """
+        items = sorted((it for q in self._queues for it in q),
+                       key=lambda it: it[0])
+        if not items:
+            return sim.ChannelSimResult(
+                per_channel=[], aggregate=sim.SimResult(0, 0, 0, 0, 0))
+
+        # -- timing fabric: one legalized stream per channel --------------
+        # every payload runs the same lowering pipeline (mid-ends,
+        # mp_split/mp_dist, legalizer) as the functional fabric; the
+        # per-back-end ports of one payload are merged back into the
+        # channel stream (exact for num_backends == 1)
+        streams = []
+        for q in self._queues:
+            parts = []
+            for _, _, payload in q:
+                parts.extend(self.lower_batch(payload))
+            streams.append(concat_batches(parts))
+        result = sim.simulate_channels(
+            streams, self.sim_config, (self.src_system, self.dst_system),
+            already_legal=True)
+        self.last_channel_result = result
+
+        # -- functional fabric: drain in submission (tid) order -----------
+        for q in self._queues:
+            q.clear()
+        for k, (tid0, channel, payload) in enumerate(items):
+            rec = self._record_for(tid0)
+            before = self.stats.bytes_moved
+            try:
+                if isinstance(payload, DescriptorBatch):
+                    if self.mem is not None:
+                        for t in payload.to_transfers():
+                            self._run(t)
+                    count = len(payload)
+                    last = int(payload.transfer_id[-1])
+                else:
+                    self._run(payload)
+                    count = 1
+                    last = tid0
+            except TransferError:
+                if rec is not None:
+                    rec.status = "error"     # terminal
+                    rec.pending -= 1
+                    rec.bytes_moved += self.stats.bytes_moved - before
+                for it in items[k + 1:]:    # failed item is consumed
+                    self._queues[it[1]].append(it)
+                raise
+            if rec is not None:
+                rec.pending -= 1
+                rec.bytes_moved += self.stats.bytes_moved - before
+                if rec.pending <= 0 and rec.status != "error":
+                    rec.status = "done"
+            self.stats.completed += count
+            self._last_completed = last
+        return result
+
+    def _add_record(self, rec: CompletionRecord) -> None:
+        self._records.append(rec)
+        self._record_starts.append(rec.tid)
+
+    def _record_for(self, tid: int) -> Optional[CompletionRecord]:
+        i = bisect.bisect_right(self._record_starts, tid) - 1
+        if i >= 0 and self._records[i].covers(tid):
+            return self._records[i]
+        return None
 
     def submit_batch(self, batch: DescriptorBatch) -> List[int]:
         """Submit every row of a `DescriptorBatch` (batched doorbell).
 
         Timing-only engines (no memory map) take the vectorized fast path:
         ids are assigned in bulk with no per-row descriptor objects.
+        Mem-backed engines dispatch the batch across the channel queues
+        and drain once — one timing simulation and one completion record
+        for the whole batch, not one per row.
         """
         n = len(batch)
-        ids = list(range(self._next_id, self._next_id + n))
         if self.mem is None:
+            ids = list(range(self._next_id, self._next_id + n))
             self._next_id += n
             self.stats.submitted += n
             self.stats.completed += n
             if n:
                 self._last_completed = ids[-1]
+                self._add_record(CompletionRecord(
+                    tid=ids[0], count=n, status="done", pending=0))
             return ids
-        return [self.submit(t) for t in batch.to_transfers()]
+        ids = self.dispatch_batch(batch)
+        self.wait_all()
+        return ids
 
     def last_completed_id(self) -> int:
         return self._last_completed
@@ -127,14 +323,18 @@ class IDMAEngine:
 
     # -- pipeline ------------------------------------------------------------
 
-    def lower_batch(self, transfer: Descriptor) -> List[DescriptorBatch]:
-        """Descriptor → per-back-end legalized burst batches (no execution).
+    def lower_batch(self, transfer: Union[Descriptor, DescriptorBatch]
+                    ) -> List[DescriptorBatch]:
+        """Descriptor (or whole batch) → per-back-end legalized burst
+        batches (no execution).
 
         The whole mid-end → mp_split → mp_dist → legalizer pipeline runs on
         the structure-of-arrays plane; custom object-level mid-end callables
         (if any) are bridged through the adapter converters.
         """
-        if isinstance(transfer, NdTransfer):
+        if isinstance(transfer, DescriptorBatch):
+            batch = transfer
+        elif isinstance(transfer, NdTransfer):
             batch = tensor_nd_batch(transfer)
         else:
             batch = DescriptorBatch.from_transfers([transfer])

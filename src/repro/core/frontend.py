@@ -166,8 +166,9 @@ class DescFrontend:
         self.memory = memory
         self.fetches = 0
 
-    def doorbell(self, addr: int) -> List[int]:
-        ids: List[int] = []
+    def _walk_chain(self, addr: int):
+        """Fetch and decode descriptors hop by hop (loop / alignment /
+        bounds checked), yielding one `Transfer1D` per hop."""
         seen = set()
         while addr != _NULL:
             if addr in seen:
@@ -180,19 +181,33 @@ class DescFrontend:
                 raise ValueError("descriptor fetch out of bounds")
             nxt, src, dst, length, sp, dp = struct.unpack(_DESC_FMT, raw)
             self.fetches += 1
-            t = Transfer1D(src_addr=src, dst_addr=dst, length=length,
-                           src_protocol=_CODE_PROTO[sp],
-                           dst_protocol=_CODE_PROTO[dp])
-            ids.append(self.engine.submit(t))
+            yield Transfer1D(src_addr=src, dst_addr=dst, length=length,
+                             src_protocol=_CODE_PROTO[sp],
+                             dst_protocol=_CODE_PROTO[dp])
             addr = nxt
-        return ids
 
-    def doorbell_ring(self, base: int, count: int) -> List[int]:
+    def doorbell(self, addr: int) -> List[int]:
+        return [self.engine.submit(t) for t in self._walk_chain(addr)]
+
+    def doorbell_async(self, addr: int) -> List[int]:
+        """Asynchronous doorbell: walk the chain and *enqueue* each hop on
+        the engine's channel submission queues (`submit_async`) instead of
+        executing inline.  Returns the transfer ids; the caller completes
+        them with `engine.wait_all()` and tracks them via `engine.poll` —
+        the submission-queue/completion-record control plane of the
+        Linux-DMAC driver model."""
+        return [self.engine.submit_async(t) for t in self._walk_chain(addr)]
+
+    def doorbell_ring(self, base: int, count: int,
+                      async_submit: bool = False) -> List[int]:
         """Batched doorbell: decode `count` contiguous descriptors at
         `base` into a `DescriptorBatch` in one `frombuffer` and submit them
         as a batch — the XDMA-style alternative to walking a chain one
         manager-port fetch at a time (next-pointers are ignored; the ring
-        layout IS the chain)."""
+        layout IS the chain).
+
+        With `async_submit` the batch is sharded across the engine's
+        channel queues (`dispatch_batch`) instead of executing inline."""
         if base < 0 or count < 0:
             raise ValueError("descriptor ring base/count must be >= 0")
         if base % 8:
@@ -212,6 +227,8 @@ class DescFrontend:
             length=raw["length"].astype(np.int64),
             src_proto=raw["sp"].astype(np.uint8),
             dst_proto=raw["dp"].astype(np.uint8))
+        if async_submit:
+            return self.engine.dispatch_batch(batch)
         return self.engine.submit_batch(batch)
 
 

@@ -30,8 +30,10 @@ The model is O(#bursts), so the full Fig. 14 sweep runs in milliseconds.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -410,6 +412,290 @@ def simulate_batch(batch: DescriptorBatch, cfg: EngineConfig,
         first_read_req=first_req,
         n_bursts=n,
     ).with_width(width)
+
+
+# --------------------------------------------------------------------------
+# Multi-channel concurrent engine model (paper §4, Fig. 14 concurrency)
+# --------------------------------------------------------------------------
+
+@dataclass
+class ChannelSimResult:
+    """Result of a concurrent multi-channel run.
+
+    `per_channel[c]` carries channel c's stream in *global* time (its
+    `cycles` is the cycle its last write beat lands, measured from the
+    common start).  `aggregate` merges them: makespan cycles, summed
+    bytes/beats/bursts, earliest first read request.
+    """
+
+    per_channel: List[SimResult]
+    aggregate: SimResult
+
+    @property
+    def aggregate_bandwidth(self) -> float:
+        """Useful bytes per cycle across all channels (the Fig. 14
+        concurrency metric — saturates as shared endpoints contend)."""
+        if self.aggregate.cycles == 0:
+            return 0.0
+        return self.aggregate.useful_bytes / self.aggregate.cycles
+
+
+class _EndpointPort:
+    """Shared per-endpoint, per-role (read or write) state.
+
+    Channels naming the *same* `MemSystem` object share this: the
+    `outstanding` credit window, the single-burst-at-a-time data port, the
+    request-channel serialization, and the cumulative contention counter
+    all span every channel targeting the endpoint.
+    """
+
+    __slots__ = ("mem", "last_req", "data_busy", "cum", "inflight",
+                 "outstanding")
+
+    def __init__(self, mem: MemSystem) -> None:
+        self.mem = mem
+        self.last_req = -1          # request channel: one grant per cycle
+        self.data_busy = 0          # data port serves one burst at a time
+        self.cum = 0                # beats served (contention accounting)
+        self.outstanding = max(1, mem.outstanding)
+        # completion times of the `outstanding` most recent grants; a new
+        # grant must wait for the oldest when the window is full
+        self.inflight = deque(maxlen=self.outstanding)
+
+    def stretch(self, beats: int) -> int:
+        p = self.mem.contention_period
+        if p <= 0:
+            return beats
+        return beats + (self.cum + beats) // p - self.cum // p
+
+
+class _ChannelState:
+    """One channel's burst stream plus its private recurrence state."""
+
+    __slots__ = ("idx", "n", "beats", "lag", "launch", "new_desc", "rlat",
+                 "wlat", "nax", "decoupled", "config", "latency",
+                 "exclusive", "i", "req_prev", "first_req", "accept",
+                 "cur_launch", "wcomp_prev", "wend_hist", "wstart_hist",
+                 "last_wend", "useful", "total_beats", "rd", "wr", "width")
+
+    def __init__(self, idx: int, bursts: DescriptorBatch, useful: int,
+                 cfg: EngineConfig, rd: _EndpointPort, wr: _EndpointPort
+                 ) -> None:
+        self.idx = idx
+        self.n = len(bursts)
+        self.rd = rd
+        self.wr = wr
+        self.width = cfg.bus_width
+        self.useful = useful
+        beats = beats_array(bursts.src_addr, bursts.length, cfg.bus_width)
+        self.total_beats = int(beats.sum())
+        self.beats = beats.tolist()
+        buf = max(1, cfg.buffer_beats)
+        self.lag = np.maximum(1, buf // np.maximum(beats, 1)).tolist()
+        self.nax = max(1, cfg.n_outstanding)
+        self.decoupled = cfg.decoupled
+        self.config = cfg.config_cycles
+        self.latency = cfg.launch_latency
+        self.exclusive = cfg.exclusive_transfers
+        # per-burst read latency: generator (Init) bursts pay none — unlike
+        # `simulate_batch`'s whole-batch flag this stays correct when a
+        # channel stream mixes Init and memory sources (async drains
+        # concatenate submissions); identical on uniform streams
+        self.rlat = np.where(bursts.src_proto == _INIT_CODE, 0,
+                             rd.mem.latency).tolist()
+        self.wlat = wr.mem.wlat
+
+        own = bursts.owner
+        nd = np.empty(self.n, dtype=bool)
+        if self.n:
+            nd[0] = True
+            nd[1:] = own[1:] != own[:-1]
+        if self.exclusive:
+            self.launch = None
+            self.new_desc = nd.tolist()
+        else:
+            rank = np.cumsum(nd) - 1
+            self.launch = (rank * (self.config + 1) + self.config
+                           + self.latency).tolist()
+            self.new_desc = None
+
+        self.i = 0
+        self.req_prev = -1
+        self.first_req = self.config + self.latency
+        self.accept = 0
+        self.cur_launch = 0
+        self.wcomp_prev = 0
+        self.wend_hist: List[int] = []
+        self.wstart_hist: List[int] = []
+        self.last_wend = 0
+
+    def lower_bound(self) -> int:
+        """Earliest possible next request time from channel-private state
+        only — the heap key (shared-endpoint constraints are resolved at
+        grant time)."""
+        i = self.i
+        if self.launch is not None:
+            lb = self.launch[i]
+        elif self.new_desc[i]:
+            lb = (max(self.accept, self.wcomp_prev) + self.config
+                  + self.latency)
+        else:
+            lb = self.cur_launch
+        if self.req_prev + 1 > lb:
+            lb = self.req_prev + 1
+        if i >= self.nax and self.wend_hist[i - self.nax] > lb:
+            lb = self.wend_hist[i - self.nax]
+        return lb
+
+    def grant(self) -> None:
+        """Issue burst `self.i`: resolve launch, shared endpoint credits,
+        data-port serialization and buffer backpressure, then commit the
+        burst's read/write phases to the shared endpoint state.
+
+        The recurrences are exactly `simulate_batch`'s — with one channel
+        per endpoint the shared terms collapse onto the private ones, so a
+        1-channel run is cycle-identical to `simulate_batch` (property-
+        tested)."""
+        i = self.i
+        rd, wr = self.rd, self.wr
+        if self.launch is not None:
+            r = self.launch[i]
+        else:
+            if self.new_desc[i]:
+                if self.wcomp_prev > self.accept:
+                    self.accept = self.wcomp_prev
+                self.cur_launch = self.accept + self.config + self.latency
+                self.accept += self.config + 1
+            r = self.cur_launch
+        if self.req_prev + 1 > r:
+            r = self.req_prev + 1
+        if rd.last_req + 1 > r:
+            r = rd.last_req + 1
+        if len(rd.inflight) == rd.outstanding and rd.inflight[0] > r:
+            r = rd.inflight[0]          # shared endpoint request credit
+        if i >= self.nax and self.wend_hist[i - self.nax] > r:
+            r = self.wend_hist[i - self.nax]    # engine tracking slot
+        self.req_prev = r
+        rd.last_req = r
+        if i == 0:
+            self.first_req = r
+
+        beats = self.beats[i]
+        rs = r + self.rlat[i]
+        if rd.data_busy > rs:
+            rs = rd.data_busy           # shared read data port
+        k = i - self.lag[i]
+        if k >= 0 and self.wstart_hist[k] > rs:
+            rs = self.wstart_hist[k]    # dataflow-element backpressure
+        re = rs + rd.stretch(beats)
+        rd.cum += beats
+        rd.data_busy = re
+        rd.inflight.append(re)
+
+        ws = rs + 1 if self.decoupled else re
+        if wr.data_busy > ws:
+            ws = wr.data_busy           # shared write data port
+        if len(wr.inflight) == wr.outstanding and wr.inflight[0] > ws:
+            ws = wr.inflight[0]         # shared write completion credit
+        we = ws + wr.stretch(beats)
+        wr.cum += beats
+        wr.data_busy = we
+        wc = we + self.wlat
+        wr.inflight.append(wc)
+
+        self.wstart_hist.append(ws)
+        self.wend_hist.append(we)
+        self.wcomp_prev = wc
+        self.last_wend = we
+        self.i += 1
+
+    def result(self) -> SimResult:
+        return SimResult(
+            cycles=self.last_wend,
+            useful_bytes=self.useful,
+            bus_beats=self.total_beats,
+            first_read_req=self.first_req,
+            n_bursts=self.n,
+        ).with_width(self.width)
+
+
+def simulate_channels(
+    batches: Sequence[DescriptorBatch],
+    cfg: Union[EngineConfig, Sequence[EngineConfig]],
+    mems: Union[Tuple[MemSystem, MemSystem],
+                Sequence[Tuple[MemSystem, MemSystem]]],
+    already_legal: bool = False,
+) -> ChannelSimResult:
+    """Concurrent multi-channel transport model (event-driven).
+
+    `batches[c]` is channel c's descriptor stream; `cfg` is one
+    `EngineConfig` for all channels or one per channel; `mems` is a single
+    ``(src, dst)`` endpoint pair shared by every channel, or one pair per
+    channel.  Endpoint state is keyed by **object identity**: channels that
+    name the same `MemSystem` instance contend for its `outstanding` credit
+    window, its one-burst-at-a-time data port, its request channel, and
+    its cumulative `contention_period` stall accounting — the paper's
+    'multiple iDMA instantiations sharing high-latency endpoints' setup.
+
+    The scheduler is a heap of per-channel next-request lower bounds:
+    the channel that could issue earliest is granted next, with shared
+    constraints resolved at grant time (deterministic; ties break on
+    channel index).  With a single channel the shared terms collapse onto
+    the private ones and the run is cycle-identical to `simulate_batch`.
+    """
+    n_ch = len(batches)
+    cfgs = ([cfg] * n_ch if isinstance(cfg, EngineConfig) else list(cfg))
+    if len(cfgs) != n_ch:
+        raise ValueError(f"{len(cfgs)} configs for {n_ch} channels")
+    if (len(mems) == 2 and isinstance(mems[0], MemSystem)
+            and isinstance(mems[1], MemSystem)):
+        pairs = [(mems[0], mems[1])] * n_ch
+    else:
+        pairs = [tuple(p) for p in mems]
+    if len(pairs) != n_ch:
+        raise ValueError(f"{len(pairs)} endpoint pairs for {n_ch} channels")
+
+    # Shared endpoint ports, keyed by MemSystem identity and role.  Read
+    # and write streams are tracked separately (independent AXI R/W
+    # channels — also what makes src==dst single-channel runs match
+    # `simulate_batch`, which keeps separate read/write accounting).
+    rd_ports: Dict[int, _EndpointPort] = {}
+    wr_ports: Dict[int, _EndpointPort] = {}
+
+    channels: List[_ChannelState] = []
+    for c in range(n_ch):
+        batch = batches[c]
+        useful = batch.total_bytes
+        if not already_legal:
+            if batch.options is not None:
+                batch = dataclasses.replace(batch, options=None)
+            batch = legalize_batch(batch, bus_width=cfgs[c].bus_width)
+        src, dst = pairs[c]
+        rd = rd_ports.setdefault(id(src), _EndpointPort(src))
+        wr = wr_ports.setdefault(id(dst), _EndpointPort(dst))
+        channels.append(_ChannelState(c, batch, useful, cfgs[c], rd, wr))
+
+    heap = [(ch.lower_bound(), ch.idx) for ch in channels if ch.n]
+    heapq.heapify(heap)
+    while heap:
+        _, c = heapq.heappop(heap)
+        ch = channels[c]
+        ch.grant()
+        if ch.i < ch.n:
+            heapq.heappush(heap, (ch.lower_bound(), c))
+
+    per = [ch.result() for ch in channels]
+    if per:
+        agg = SimResult(
+            cycles=max(r.cycles for r in per),
+            useful_bytes=sum(r.useful_bytes for r in per),
+            bus_beats=sum(r.bus_beats for r in per),
+            first_read_req=min(r.first_read_req for r in per),
+            n_bursts=sum(r.n_bursts for r in per),
+        ).with_width(cfgs[0].bus_width)
+    else:
+        agg = SimResult(0, 0, 0, 0, 0)
+    return ChannelSimResult(per_channel=per, aggregate=agg)
 
 
 # --------------------------------------------------------------------------

@@ -1,2 +1,25 @@
-from .serve_step import make_prefill_step, make_decode_step
-from .engine import ServeEngine, Request
+"""Serving: batched prefill/decode engine + the paged-KV DMA plane.
+
+The step-function engine (`ServeEngine`) needs the model / sharding
+stack; the paged-KV descriptor plane (`kvcache`) only needs `repro.core`
+and jax — so the heavy imports are optional and the DMA path stays
+usable in core-only builds.
+"""
+
+from .kvcache import (KVLayout, PagedKVDMA, PagePool, append_descriptors,
+                      append_token, gather_descriptors, gather_kv,
+                      init_paged_kv, make_page_tables)
+
+try:  # model/sharding stack — optional in core-only builds
+    from .serve_step import make_prefill_step, make_decode_step
+    from .engine import ServeEngine, Request
+except ModuleNotFoundError:  # pragma: no cover - dist-less build
+    make_prefill_step = make_decode_step = None
+    ServeEngine = Request = None
+
+__all__ = [
+    "KVLayout", "PagedKVDMA", "PagePool", "append_descriptors",
+    "append_token", "gather_descriptors", "gather_kv", "init_paged_kv",
+    "make_page_tables",
+    "make_prefill_step", "make_decode_step", "ServeEngine", "Request",
+]

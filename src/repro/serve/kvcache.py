@@ -14,6 +14,15 @@ a physical pool across requests of ragged lengths:
 The gather materializes a contiguous view for the attention op — on TPU
 the indices-based `take` lowers onto the same DMA engines the kernels
 use.  Tests assert paged == contiguous decode.
+
+The second half of this module expresses the same paged traffic on the
+batched descriptor plane: `append_descriptors` / `gather_descriptors`
+build `DescriptorBatch` scatter/gather streams straight from a page
+table, and `PagedKVDMA` executes them through an `IDMAEngine`
+(HBM pool ↔ VMEM staging) — the serving engine's decode-step cache
+traffic expressed as engine transfers, exactly the paper's
+scatter-gather transfer type (Table 5).  Tests assert
+paged-via-DMA == contiguous.
 """
 
 from __future__ import annotations
@@ -24,6 +33,8 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import DescriptorBatch, IDMAEngine, MemoryMap, Protocol
 
 
 @dataclass
@@ -96,3 +107,199 @@ def make_page_tables(pool_alloc: PagePool, batch: int, seq_len: int
         for i in range(per_seq):
             tables[b, i] = pool_alloc.alloc()
     return tables
+
+
+# ---------------------------------------------------------------------------
+# Descriptor-plane scatter/gather (the iDMA serving path)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KVLayout:
+    """Byte layout of one paged K or V pool: (n_pages, page_size, Hkv, dh).
+
+    `row_bytes` is one token's KV row, `page_bytes` one physical page —
+    the transfer granules of the scatter (append) and gather streams.
+    """
+
+    n_pages: int
+    page_size: int
+    n_kv_heads: int
+    head_dim: int
+    itemsize: int = 4
+
+    @property
+    def row_bytes(self) -> int:
+        return self.n_kv_heads * self.head_dim * self.itemsize
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_size * self.row_bytes
+
+    @property
+    def pool_bytes(self) -> int:
+        return self.n_pages * self.page_bytes
+
+
+def gather_descriptors(layout: KVLayout, page_table: np.ndarray,
+                       max_len: int, pool_base: int = 0, dst_base: int = 0,
+                       src_protocol: Protocol = Protocol.HBM,
+                       dst_protocol: Protocol = Protocol.VMEM
+                       ) -> DescriptorBatch:
+    """Page-gather as a `DescriptorBatch`: one page-sized transfer per
+    (sequence, page) pair, materializing contiguous per-sequence KV rows.
+
+    Row ordering matches `gather_kv`: sequence-major, pages in table
+    order, so the destination range ``[dst_base + b*L*row_bytes, ...)`` is
+    sequence b's first `max_len` token rows, contiguous.
+    """
+    n = max_len // layout.page_size
+    tables = np.asarray(page_table)[:, :n].astype(np.int64)   # (B, n)
+    B = tables.shape[0]
+    src = pool_base + tables.reshape(-1) * layout.page_bytes
+    dst = dst_base + np.arange(B * n, dtype=np.int64) * layout.page_bytes
+    return DescriptorBatch.from_arrays(
+        src_addr=src, dst_addr=dst,
+        length=np.full(B * n, layout.page_bytes, dtype=np.int64),
+        src_protocol=src_protocol, dst_protocol=dst_protocol)
+
+
+def append_descriptors(layout: KVLayout, page_table: np.ndarray, pos: int,
+                       src_base: int = 0, pool_base: int = 0,
+                       src_protocol: Protocol = Protocol.VMEM,
+                       dst_protocol: Protocol = Protocol.HBM
+                       ) -> DescriptorBatch:
+    """Token-append as a `DescriptorBatch`: scatter one row-sized transfer
+    per sequence from a contiguous staging buffer (row b at
+    ``src_base + b*row_bytes``) into each sequence's current page slot."""
+    tables = np.asarray(page_table).astype(np.int64)
+    page_idx = pos // layout.page_size
+    offset = pos % layout.page_size
+    phys = tables[:, page_idx]                                # (B,)
+    B = phys.shape[0]
+    src = src_base + np.arange(B, dtype=np.int64) * layout.row_bytes
+    dst = (pool_base + phys * layout.page_bytes
+           + offset * layout.row_bytes)
+    return DescriptorBatch.from_arrays(
+        src_addr=src, dst_addr=dst,
+        length=np.full(B, layout.row_bytes, dtype=np.int64),
+        src_protocol=src_protocol, dst_protocol=dst_protocol)
+
+
+class PagedKVDMA:
+    """A paged KV cache whose append/gather are *engine transfers*.
+
+    The physical pools live in an HBM address space (K at 0, V at
+    `layout.pool_bytes`); append stages token rows in VMEM and scatters
+    them via `append_descriptors`; gather runs `gather_descriptors` into
+    a contiguous VMEM region.  All traffic is dispatched across the
+    engine's channels (`dispatch_batch` → `wait_all`), so decode-step
+    cache movement shows up in the engine's stats and multi-channel
+    timing model like any other DMA workload.
+    """
+
+    def __init__(self, layout: KVLayout, max_batch: int, max_len: int,
+                 engine: Optional[IDMAEngine] = None,
+                 num_channels: int = 1) -> None:
+        self.layout = layout
+        self.max_batch = max_batch
+        self.max_len = max_len
+        gather_bytes = max_batch * max_len * layout.row_bytes
+        stage_bytes = max_batch * layout.row_bytes
+        # VMEM: [0, G) gather-K, [G, 2G) gather-V, then staging K, V rows
+        self._gk = 0
+        self._gv = gather_bytes
+        self._sk = 2 * gather_bytes
+        self._sv = 2 * gather_bytes + stage_bytes
+        mem = MemoryMap.create({
+            Protocol.HBM: 2 * layout.pool_bytes,
+            Protocol.VMEM: 2 * gather_bytes + 2 * stage_bytes,
+        })
+        if engine is None:
+            engine = IDMAEngine(mem=mem, num_channels=num_channels)
+        elif engine.mem is None:
+            raise ValueError("PagedKVDMA needs an engine with a MemoryMap")
+        else:
+            # adopt the engine's existing spaces (never clobber them);
+            # they must be big enough to host the pools/staging
+            for proto, arr in mem.spaces.items():
+                have = engine.mem.spaces.get(proto)
+                if have is None:
+                    engine.mem.spaces[proto] = arr
+                elif have.size < arr.size:
+                    raise ValueError(
+                        f"engine {proto} space has {have.size} B, paged KV "
+                        f"needs {arr.size} B")
+        self.engine = engine
+        self.mem = engine.mem
+
+    # -- pool views ---------------------------------------------------------
+
+    def _pool(self, which: str) -> np.ndarray:
+        base = 0 if which == "k" else self.layout.pool_bytes
+        return self.mem.spaces[Protocol.HBM][base:base
+                                             + self.layout.pool_bytes]
+
+    def load_pool(self, which: str, pool: np.ndarray) -> None:
+        """Copy an existing (n_pages, page_size, Hkv, dh) pool in."""
+        self._pool(which)[:] = np.ascontiguousarray(pool).view(np.uint8
+                                                               ).reshape(-1)
+
+    # -- the decode-step traffic -------------------------------------------
+
+    def append(self, page_table: np.ndarray, pos: int,
+               k: np.ndarray, v: np.ndarray) -> List[int]:
+        """Scatter one token's (B, Hkv, dh) K/V rows into the pools.
+
+        Returns the transfer ids of the dispatched scatter descriptors."""
+        lay = self.layout
+        B = k.shape[0]
+        if B > self.max_batch:
+            raise ValueError(f"append batch {B} exceeds max_batch "
+                             f"{self.max_batch}")
+        vmem = self.mem.spaces[Protocol.VMEM]
+        kb = np.ascontiguousarray(k).view(np.uint8).reshape(-1)
+        vb = np.ascontiguousarray(v).view(np.uint8).reshape(-1)
+        vmem[self._sk:self._sk + kb.size] = kb
+        vmem[self._sv:self._sv + vb.size] = vb
+        ids = self.engine.dispatch_batch(append_descriptors(
+            lay, page_table, pos, src_base=self._sk, pool_base=0))
+        ids += self.engine.dispatch_batch(append_descriptors(
+            lay, page_table, pos, src_base=self._sv,
+            pool_base=lay.pool_bytes))
+        self.engine.wait_all()
+        return ids
+
+    def gather(self, page_table: np.ndarray, max_len: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize contiguous (B, Hkv, L, dh) K/V copies by running
+        the page-gather descriptor stream through the engine.
+
+        As with `gather_kv`, only whole pages are gathered:
+        ``L = (max_len // page_size) * page_size``."""
+        lay = self.layout
+        B = np.asarray(page_table).shape[0]
+        L = (max_len // lay.page_size) * lay.page_size
+        if B > self.max_batch or L > self.max_len:
+            raise ValueError(
+                f"gather ({B}, {L}) exceeds the ({self.max_batch}, "
+                f"{self.max_len}) VMEM region this cache was sized for")
+        self.engine.dispatch_batch(gather_descriptors(
+            lay, page_table, max_len, pool_base=0, dst_base=self._gk))
+        self.engine.dispatch_batch(gather_descriptors(
+            lay, page_table, max_len, pool_base=lay.pool_bytes,
+            dst_base=self._gv))
+        self.engine.wait_all()
+
+        vmem = self.mem.spaces[Protocol.VMEM]
+        nbytes = B * L * lay.row_bytes
+        dtype = {1: np.uint8, 2: np.float16, 4: np.float32,
+                 8: np.float64}[lay.itemsize]
+
+        def out(base: int) -> np.ndarray:
+            flat = vmem[base:base + nbytes].view(dtype)
+            arr = flat.reshape(B, L, lay.n_kv_heads, lay.head_dim)
+            # copy: later gathers reuse the VMEM region, results must not
+            # alias it
+            return arr.transpose(0, 2, 1, 3).copy()
+
+        return out(self._gk), out(self._gv)

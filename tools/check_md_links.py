@@ -1,0 +1,51 @@
+"""Markdown link check: every local link/anchor target in *.md exists.
+
+No network, no dependencies — external (http/https/mailto) links are
+syntax-checked only.  Exits non-zero listing broken local links, so CI
+catches a doc pointing at a moved module or a deleted file.
+
+    python tools/check_md_links.py [root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules",
+             ".claude"}
+
+
+def md_files(root: Path):
+    for p in root.rglob("*.md"):
+        if not SKIP_DIRS.intersection(p.relative_to(root).parts):
+            yield p
+
+
+def check(root: Path) -> int:
+    broken = []
+    for md in md_files(root):
+        text = md.read_text(encoding="utf-8")
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(root)}: ({target})")
+    if broken:
+        print("broken local markdown links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"markdown links OK ({sum(1 for _ in md_files(root))} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    sys.exit(check(root.resolve()))
