@@ -1,0 +1,134 @@
+"""Data-plane benchmark: vectorized `execute_batch` vs the scalar oracle.
+
+PR 1 vectorized the *timing* plane (legalize/simulate); this suite gates
+the *functional* plane — the path that actually moves bytes (paper §2.3).
+Three measurements:
+
+1. A 1M-burst random scatter/gather stream (disjoint 64-B slots, ragged
+   1..64-B bursts, HBM→VMEM) executed byte-for-byte on the scalar path
+   (`execute`: per-burst Python loop over `Transfer1D` objects) and on the
+   batch path (`execute_batch`: grouped gather/scatter with fancy
+   indexing).  Asserts the destinations are byte-identical and the batch
+   path is >= 10x faster — the CI gate.
+
+2. The same stream with the destination permutation removed (a linear
+   copy), batch path only — the dense upper bound for the grouped
+   gather/scatter.
+
+3. A 1M-burst Init (pseudorandom) fill through the vectorized splitmix32
+   stream generator — the generator-protocol data plane at scale.
+
+Results are stashed in the module-level ``LAST`` dict so
+``benchmarks/run.py --json`` persists them as the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (BackendOptions, DescriptorBatch, InitPattern,
+                        MemoryMap, Protocol, execute, execute_batch,
+                        legalize_batch)
+
+N = 1_000_000
+SLOT = 64                     # address slot per burst; lengths are 1..SLOT
+BUS = 8
+
+#: last run's headline numbers, for `benchmarks.run --json`
+LAST = {}
+
+
+def scatter_gather_stream(n: int = N, slot: int = SLOT, seed: int = 0,
+                          scatter: bool = True) -> DescriptorBatch:
+    """`n` ragged bursts between disjoint `slot`-aligned windows: every
+    burst owns its own source and destination slot (permuted when
+    `scatter`), so the stream is order-independent — the byte-identity
+    check between the scalar and grouped paths is exact."""
+    rng = np.random.default_rng(seed)
+    length = rng.integers(1, slot + 1, n).astype(np.int64)
+    src = rng.permutation(n).astype(np.int64) * slot
+    dst = (rng.permutation(n) if scatter
+           else np.arange(n)).astype(np.int64) * slot
+    return DescriptorBatch.from_arrays(
+        src_addr=src, dst_addr=dst, length=length,
+        src_protocol=Protocol.HBM, dst_protocol=Protocol.VMEM)
+
+
+def _mem(n: int = N, slot: int = SLOT, seed: int = 1) -> MemoryMap:
+    mem = MemoryMap.create({Protocol.HBM: n * slot, Protocol.VMEM: n * slot})
+    rng = np.random.default_rng(seed)
+    mem.spaces[Protocol.HBM][:] = rng.integers(
+        0, 256, n * slot, dtype=np.uint8)
+    return mem
+
+
+def run(csv_rows):
+    legal = legalize_batch(scatter_gather_stream(), bus_width=BUS)
+    total = int(legal.length.sum())
+
+    # 1 — scalar oracle vs batch path, byte-identical destinations
+    mem_obj = _mem()
+    bursts = legal.to_transfers()          # object materialization untimed
+    t0 = time.perf_counter()
+    moved_obj = execute(bursts, mem_obj, bus_width=BUS)
+    t_obj = time.perf_counter() - t0
+    del bursts
+
+    mem_bat = _mem()
+    t_bat = float("inf")
+    for _ in range(3):
+        mem_bat.spaces[Protocol.VMEM][:] = 0
+        t0 = time.perf_counter()
+        moved_bat = execute_batch(legal, mem_bat, bus_width=BUS)
+        t_bat = min(t_bat, time.perf_counter() - t0)
+
+    assert moved_obj == moved_bat == total
+    assert np.array_equal(mem_obj.spaces[Protocol.VMEM],
+                          mem_bat.spaces[Protocol.VMEM]), \
+        "execute_batch diverged from the scalar oracle"
+    del mem_obj
+    speedup = t_obj / t_bat
+    gbps = total / t_bat / 1e9
+    csv_rows.append(("dataplane_scatter_gather_1M_scalar_s", t_obj, ""))
+    csv_rows.append(("dataplane_scatter_gather_1M_batch_s", t_bat, ""))
+    csv_rows.append(("dataplane_scatter_gather_1M_speedup", speedup,
+                     "target>=10x"))
+    csv_rows.append(("dataplane_scatter_gather_1M_GBps", gbps, ""))
+
+    # 2 — dense upper bound: same bursts, linear destination walk
+    dense = legalize_batch(scatter_gather_stream(scatter=False),
+                           bus_width=BUS)
+    t0 = time.perf_counter()
+    execute_batch(dense, mem_bat, bus_width=BUS)
+    t_dense = time.perf_counter() - t0
+    csv_rows.append(("dataplane_linear_1M_batch_s", t_dense, ""))
+
+    # 3 — generator data plane: 1M pseudorandom Init bursts
+    init = DescriptorBatch.from_arrays(
+        src_addr=np.arange(N, dtype=np.int64) * SLOT,
+        dst_addr=np.arange(N, dtype=np.int64) * SLOT,
+        length=np.full(N, SLOT, dtype=np.int64),
+        src_protocol=Protocol.INIT, dst_protocol=Protocol.VMEM,
+        options=BackendOptions(init_pattern=InitPattern.PSEUDORANDOM,
+                               init_value=7))
+    t0 = time.perf_counter()
+    moved_init = execute_batch(legalize_batch(init, bus_width=BUS), mem_bat,
+                               bus_width=BUS)
+    t_init = time.perf_counter() - t0
+    csv_rows.append(("dataplane_init_prng_1M_s", t_init, ""))
+    csv_rows.append(("dataplane_init_prng_1M_GBps",
+                     moved_init / t_init / 1e9, ""))
+
+    LAST.update({
+        "scatter_gather_1M_scalar_s": t_obj,
+        "scatter_gather_1M_batch_s": t_bat,
+        "scatter_gather_1M_speedup": speedup,
+        "scatter_gather_1M_GBps": gbps,
+        "linear_1M_batch_s": t_dense,
+        "init_prng_1M_s": t_init,
+        "bytes_moved": total,
+    })
+    assert speedup >= 10.0, \
+        f"execute_batch only {speedup:.1f}x over scalar (need >= 10x)"

@@ -27,6 +27,7 @@ SUITES = [
     ("latency", "§4.3"),
     ("workload_speedup", "§3.4 / §3.5 (Fig. 11)"),
     ("descriptor_plane", "SoA vs object descriptor hot path"),
+    ("dataplane", "vectorized functional data plane (execute_batch)"),
     ("channel_sweep", "multi-channel aggregate bandwidth (§4 concurrency)"),
     ("kernel_bench", "kernels + TPU rooflines"),
     ("roofline", "dry-run roofline table"),
@@ -35,6 +36,7 @@ SUITES = [
 #: suite name → module (descriptor_plane lives in descriptor_plane_bench)
 _MODULES = {name: f"benchmarks.{name}" for name, _ in SUITES}
 _MODULES["descriptor_plane"] = "benchmarks.descriptor_plane_bench"
+_MODULES["dataplane"] = "benchmarks.dataplane_bench"
 
 
 def main() -> None:
@@ -74,19 +76,14 @@ def main() -> None:
         payload = {"suite_wall_clock_s": wall}
         if errors:
             payload["suite_errors"] = errors
-        if "descriptor_plane" in wall or "descriptor_plane" in errors:
+        # persist any suite's module-level LAST dict (partial data survives
+        # a failed gate; import-time failures are already in suite_errors)
+        for name in sorted(set(wall) | set(errors)):
             try:
-                from benchmarks import descriptor_plane_bench
-                if descriptor_plane_bench.LAST:   # partial data on failure
-                    payload["descriptor_plane"] = dict(
-                        descriptor_plane_bench.LAST)
-            except Exception:
-                pass          # import-time failure already in suite_errors
-        if "channel_sweep" in wall or "channel_sweep" in errors:
-            try:
-                from benchmarks import channel_sweep
-                if channel_sweep.LAST:
-                    payload["channel_sweep"] = dict(channel_sweep.LAST)
+                last = getattr(importlib.import_module(_MODULES[name]),
+                               "LAST", None)
+                if last:
+                    payload[name] = dict(last)
             except Exception:
                 pass
         with open(args.json, "w") as f:

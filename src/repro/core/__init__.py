@@ -12,15 +12,15 @@ from .descriptor import (CODE_PROTO, PROTO_CODE, BackendOptions,
                          Transfer1D, concat_batches, contiguous_coverage,
                          total_bytes)
 from .legalizer import (PAGE_SIZE, TPU_DMA_GRANULE, check_legal,
-                        legal_latency, legalize, legalize_batch,
-                        legalize_tile)
+                        check_legal_batch, legal_latency, legalize,
+                        legalize_batch, legalize_tile)
 from .midend import (coalesce_nd, iter_tensor_nd, mp_dist, mp_dist_batch,
                      mp_dist_tree, mp_split, mp_split_batch, rt_schedule,
                      split_and_distribute, tensor_2d, tensor_nd,
                      tensor_nd_batch)
 from .frontend import (DescFrontend, InstFrontend, RegFrontend, write_chain)
-from .backend import (MemoryMap, TransferError, execute, init_stream,
-                      splitmix32, splitmix64)
+from .backend import (MemoryMap, TransferError, execute, execute_batch,
+                      init_stream, splitmix32, splitmix64)
 from .engine import (CompletionRecord, ErrorPolicy, IDMAEngine, TilePlan,
                      plan_nd_copy)
 from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, ChannelSimResult,
@@ -38,14 +38,14 @@ __all__ = [
     "MidendBundle", "NdTransfer", "PROTO_CODE", "Protocol", "RtConfig",
     "TensorDim", "Transfer1D", "concat_batches", "contiguous_coverage",
     "total_bytes",
-    "PAGE_SIZE", "TPU_DMA_GRANULE", "check_legal", "legal_latency",
-    "legalize", "legalize_batch", "legalize_tile",
+    "PAGE_SIZE", "TPU_DMA_GRANULE", "check_legal", "check_legal_batch",
+    "legal_latency", "legalize", "legalize_batch", "legalize_tile",
     "coalesce_nd", "iter_tensor_nd", "mp_dist", "mp_dist_batch",
     "mp_dist_tree", "mp_split", "mp_split_batch", "rt_schedule",
     "split_and_distribute", "tensor_2d", "tensor_nd", "tensor_nd_batch",
     "DescFrontend", "InstFrontend", "RegFrontend", "write_chain",
-    "MemoryMap", "TransferError", "execute", "init_stream", "splitmix32",
-    "splitmix64",
+    "MemoryMap", "TransferError", "execute", "execute_batch", "init_stream",
+    "splitmix32", "splitmix64",
     "CompletionRecord", "ErrorPolicy", "IDMAEngine", "TilePlan",
     "plan_nd_copy",
     "HBM", "PULP_L2", "RPC_DRAM", "SRAM", "ChannelSimResult",

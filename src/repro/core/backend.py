@@ -19,9 +19,10 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .descriptor import (GENERATOR_PROTOCOLS, InitPattern, Protocol,
-                         Transfer1D)
-from .legalizer import check_legal
+from .descriptor import (CODE_PROTO, GENERATOR_PROTOCOLS, PROTO_CODE,
+                         BackendOptions, DescriptorBatch, InitPattern,
+                         Protocol, Transfer1D)
+from .legalizer import check_legal, check_legal_batch
 
 
 def splitmix32(x: np.ndarray) -> np.ndarray:
@@ -99,6 +100,10 @@ class MemoryMap:
 
     def read(self, protocol: Protocol, addr: int, length: int) -> np.ndarray:
         buf = self.space(protocol)
+        # addr < 0 must be rejected explicitly: Python slice semantics would
+        # silently wrap and return the wrong bytes while the end-guard passes
+        if addr < 0:
+            raise IndexError(f"read at negative address {addr} on {protocol}")
         if addr + length > buf.size:
             raise IndexError(
                 f"read [{addr}, {addr + length}) beyond {protocol} size {buf.size}")
@@ -106,6 +111,8 @@ class MemoryMap:
 
     def write(self, protocol: Protocol, addr: int, data: np.ndarray) -> None:
         buf = self.space(protocol)
+        if addr < 0:
+            raise IndexError(f"write at negative address {addr} on {protocol}")
         if addr + data.size > buf.size:
             raise IndexError(
                 f"write [{addr}, {addr + data.size}) beyond {protocol} size {buf.size}")
@@ -114,14 +121,22 @@ class MemoryMap:
 
 @dataclass
 class TransferError(Exception):
-    """A failing burst, reported with its legalized base address so the
-    front-end can decide continue/abort/replay (paper's error handler)."""
+    """A failing burst, reported with its legalized base address AND its
+    index in the executed burst sequence so the front-end can decide
+    continue/abort/replay (paper's error handler).
+
+    `index` is relative to the sequence the raising `execute`/
+    `execute_batch` call was given: locating the offender by value is
+    ambiguous when a stream carries duplicate identical bursts.
+    """
 
     burst: Transfer1D
     reason: str
+    index: int = -1
 
     def __str__(self) -> str:
-        return (f"transfer error at src={self.burst.src_addr:#x} "
+        return (f"transfer error at burst {self.index} "
+                f"src={self.burst.src_addr:#x} "
                 f"dst={self.burst.dst_addr:#x} len={self.burst.length}: "
                 f"{self.reason}")
 
@@ -163,26 +178,346 @@ def execute(bursts: Sequence[Transfer1D], mem: MemoryMap,
     `instream` — optional in-stream accelerator applied between the read and
     write managers (paper Fig. 5 '⚡' port).
     `fail_at` — burst index to fault (error-handler tests).
-    `stream_base` — per-transfer-id base offset for generator streams, so a
-    legalized Init transfer produces the same stream as the unsplit one.
+    `stream_base` — per-transfer-id stream origin for generator sources: a
+    generator burst's stream offset is ``src_addr - stream_base.get(tid, 0)``.
+    With the default origin of 0 the offset is the absolute source address,
+    so a legalized Init transfer produces the same stream as the unsplit
+    one even when its bursts are split across back-end ports or replayed
+    in separate `execute` calls.
+
+    Faults — injected or real (an out-of-bounds burst) — raise
+    `TransferError` carrying the burst and its index; bursts before the
+    offender have fully executed, the offender has no effect.
     """
     check_legal(bursts, bus_width=bus_width)
     rm = ReadManager(mem)
     wm = WriteManager(mem)
     moved = 0
-    origin: Dict[int, int] = {}
     for i, b in enumerate(bursts):
         if fail_at is not None and i == fail_at:
-            raise TransferError(b, "injected fault")
-        base = origin.setdefault(
-            b.transfer_id,
-            b.src_addr if stream_base is None
-            else stream_base.get(b.transfer_id, b.src_addr))
-        data = rm.fetch(b, stream_offset=b.src_addr - base
-                        if b.src_protocol not in GENERATOR_PROTOCOLS
-                        else b.src_addr)
-        if instream is not None:
-            data = instream(data)
-        wm.commit(b, data)
+            raise TransferError(b, "injected fault", index=i)
+        if b.src_protocol in GENERATOR_PROTOCOLS:
+            base = 0 if stream_base is None \
+                else stream_base.get(b.transfer_id, 0)
+            offset = b.src_addr - base
+        else:
+            offset = 0                      # unused for memory sources
+        try:
+            data = rm.fetch(b, stream_offset=offset)
+            if instream is not None:
+                data = instream(data)
+            wm.commit(b, data)
+        except IndexError as err:           # bounds fault -> error handler
+            raise TransferError(b, str(err), index=i) from None
         moved += b.length
+    return moved
+
+
+# --------------------------------------------------------------------------
+# Vectorized functional data plane — the batched sibling of `execute`.
+# --------------------------------------------------------------------------
+
+#: payload bytes materialized per vectorized slice of one protocol group;
+#: bounds the int64 index scratch at a small multiple of this.
+EXEC_CHUNK_BYTES = 16 << 20
+
+#: numeric Init pattern codes, so grouped stream generation never touches
+#: per-row Python objects
+_INIT_CODE = {InitPattern.CONSTANT: 0, InitPattern.INCREMENTING: 1,
+              InitPattern.PSEUDORANDOM: 2}
+
+_GEN_CODES = np.asarray([PROTO_CODE[p] for p in GENERATOR_PROTOCOLS],
+                        dtype=np.uint8)
+
+
+def _chunked(lens: np.ndarray):
+    """Yield (row_slice, pos, split_points) covering all rows in slices of
+    at most ~EXEC_CHUNK_BYTES payload (always >= 1 row per slice).
+
+    `pos` is the intra-burst byte offset of every payload byte of the
+    slice; `split_points` cut the flat payload back into per-burst chunks
+    (for the in-stream accelerator).
+    """
+    n = lens.shape[0]
+    cum = np.concatenate(([0], np.cumsum(lens)))
+    row = 0
+    while row < n:
+        hi = int(np.searchsorted(cum, cum[row] + EXEC_CHUNK_BYTES,
+                                 side="right")) - 1
+        hi = min(max(hi, row + 1), n)
+        sl = np.s_[row:hi]
+        starts = cum[row:hi] - cum[row]
+        pos = np.arange(int(cum[hi] - cum[row]), dtype=np.int64) \
+            - np.repeat(starts, lens[sl])
+        yield sl, pos, starts[1:]
+        row = hi
+
+
+def _apply_instream(data: np.ndarray, split_points: np.ndarray,
+                    instream) -> np.ndarray:
+    """Per-burst application of the in-stream accelerator: the flat group
+    payload is cut back into burst chunks, transformed, re-concatenated.
+    Transforms must be length-preserving on the batched path."""
+    parts = [np.asarray(instream(p)) for p in np.split(data, split_points)]
+    out = np.concatenate(parts) if parts else data
+    if out.shape[0] != data.shape[0]:
+        raise ValueError(
+            "in-stream accelerators must preserve length on the batched "
+            f"path (got {out.shape[0]} bytes from {data.shape[0]})")
+    return out
+
+
+def _length_bins(lens: np.ndarray):
+    """Yield (L, rows) groups of equal burst length, zero-length dropped.
+
+    Legalized streams cluster on very few distinct lengths (the protocol
+    cap plus tails), so binning turns ragged gather/scatter into dense 2-D
+    broadcast indexing — no `np.repeat` index materialization at all.
+    """
+    n = lens.shape[0]
+    first = int(lens[0])
+    if (lens == first).all():            # uniform-length stream: no sort
+        if first:
+            yield first, np.arange(n, dtype=np.int64)
+        return
+    uniq, inv = np.unique(lens, return_inverse=True)
+    order = np.argsort(inv, kind="stable")
+    bounds = np.searchsorted(inv[order], np.arange(uniq.shape[0] + 1))
+    for k in range(uniq.shape[0]):
+        length = int(uniq[k])
+        if length:
+            yield length, order[bounds[k]:bounds[k + 1]]
+
+
+def _exec_copy_group(src_buf: np.ndarray, dst_buf: np.ndarray,
+                     sa: np.ndarray, da: np.ndarray, lens: np.ndarray,
+                     instream) -> None:
+    """Grouped gather/scatter: every burst of one (src, dst) protocol pair
+    moved with two fancy-indexed array ops per length bin / chunk."""
+    if instream is None:
+        for length, rows in _length_bins(lens):
+            span = np.arange(length, dtype=np.int64)
+            step = max(EXEC_CHUNK_BYTES // length, 1)
+            for i in range(0, rows.shape[0], step):
+                r = rows[i:i + step]
+                dst_buf[da[r][:, None] + span] = src_buf[sa[r][:, None] + span]
+        return
+    # in-stream accelerator: per-burst chunks in row order (ragged path)
+    for sl, pos, splits in _chunked(lens):
+        data = src_buf[np.repeat(sa[sl], lens[sl]) + pos]
+        data = _apply_instream(data, splits, instream)
+        dst_buf[np.repeat(da[sl], lens[sl]) + pos] = data
+
+
+def _init_params(batch: DescriptorBatch, rows: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """(pattern_code, init_value) columns for generator rows."""
+    opts = batch.options
+    m = rows.shape[0]
+    if opts is None:
+        return np.zeros(m, dtype=np.int64), np.zeros(m, dtype=np.int64)
+    if isinstance(opts, BackendOptions):
+        return (np.full(m, _INIT_CODE[opts.init_pattern], dtype=np.int64),
+                np.full(m, opts.init_value, dtype=np.int64))
+    return (np.fromiter((_INIT_CODE[opts[int(i)].init_pattern]
+                         for i in rows), dtype=np.int64, count=m),
+            np.fromiter((opts[int(i)].init_value for i in rows),
+                        dtype=np.int64, count=m))
+
+
+def _gen_stream(pattern: int, off: np.ndarray, val: np.ndarray
+                ) -> np.ndarray:
+    """Vectorized Init read manager: bytes at stream offsets `off` with
+    per-byte init value `val` — bit-exact with `init_stream`."""
+    if pattern == 0:                                   # CONSTANT
+        return (val & 0xFF).astype(np.uint8)
+    if pattern == 1:                                   # INCREMENTING
+        return ((off + val) & 0xFF).astype(np.uint8)
+    # PSEUDORANDOM: splitmix32 over 32-bit words, little-endian bytes
+    word = (off >> 2) % (1 << 32)
+    w = splitmix32(word.astype(np.uint32) + val.astype(np.uint32))
+    shift = ((off & 3) << 3).astype(np.uint32)
+    return ((w >> shift) & np.uint32(0xFF)).astype(np.uint8)
+
+
+def _gen_prng_rows(starts: np.ndarray, vals: np.ndarray, length: int
+                   ) -> np.ndarray:
+    """PSEUDORANDOM streams for a uniform-length bin, word-granular.
+
+    `starts`/`vals` are (rows, 1) column vectors.  The per-byte `_gen_stream`
+    form runs splitmix32 once per BYTE; here each 32-bit word is generated
+    once (as in `init_stream`) and expanded little-endian, then the
+    (possibly misaligned) byte windows are sliced out per row — 4x less
+    PRNG work, bit-exact with the scalar oracle.
+    """
+    rows = starts.shape[0]
+    n_words = (length + 6) >> 2          # covers any start misalignment
+    words = (starts >> 2) + np.arange(n_words, dtype=np.int64)
+    if (int(starts.min()) >> 2) < 0 or \
+            (int(starts.max()) >> 2) + n_words >= (1 << 32):
+        words = words % (1 << 32)        # rare: counter wrap, as init_stream
+    w = splitmix32(words.astype(np.uint32) + vals.astype(np.uint32))
+    stream = w.view(np.uint8).reshape(rows, n_words * 4)
+    shifts = starts & 3
+    s0 = int(shifts[0, 0])
+    if (shifts == s0).all():             # uniform alignment: pure slice
+        return stream[:, s0:s0 + length]
+    cols = shifts + np.arange(length, dtype=np.int64)
+    return stream[np.arange(rows, dtype=np.int64)[:, None], cols]
+
+
+def _exec_init_group(batch: DescriptorBatch, rows: np.ndarray,
+                     dst_buf: np.ndarray, instream,
+                     stream_base: Optional[Dict[int, int]]) -> None:
+    """Generator source: produce the Init streams of a whole row group
+    vectorized, then scatter them (splitmix32 path for PSEUDORANDOM)."""
+    pats, vals = _init_params(batch, rows)
+    base = np.zeros(rows.shape[0], dtype=np.int64)
+    if stream_base:
+        tids = batch.transfer_id[rows]
+        for tid, b in stream_base.items():
+            base[tids == tid] = b
+    sa = batch.src_addr[rows] - base
+    da = batch.dst_addr[rows]
+    lens = batch.length[rows]
+    for pat in np.unique(pats).tolist():
+        sub = np.flatnonzero(pats == pat)
+        s_sa, s_da, s_ln, s_val = sa[sub], da[sub], lens[sub], vals[sub]
+        if instream is None:
+            for length, bin_rows in _length_bins(s_ln):
+                span = np.arange(length, dtype=np.int64)
+                step = max(EXEC_CHUNK_BYTES // length, 1)
+                for i in range(0, bin_rows.shape[0], step):
+                    r = bin_rows[i:i + step]
+                    starts = s_sa[r][:, None]
+                    vals_c = s_val[r][:, None]
+                    if pat == 2:
+                        data = _gen_prng_rows(starts, vals_c, length)
+                    elif pat == 1:
+                        data = _gen_stream(pat, starts + span, vals_c)
+                    else:
+                        data = _gen_stream(pat, starts, vals_c)
+                    dst_buf[s_da[r][:, None] + span] = data
+            continue
+        for sl, pos, splits in _chunked(s_ln):
+            reps = s_ln[sl]
+            off = np.repeat(s_sa[sl], reps) + pos
+            data = _gen_stream(pat, off, np.repeat(s_val[sl], reps))
+            data = _apply_instream(data, splits, instream)
+            dst_buf[np.repeat(s_da[sl], reps) + pos] = data
+
+
+def _first_fault(batch: DescriptorBatch, mem: MemoryMap, src_gen: np.ndarray,
+                 fail_at: Optional[int]) -> Optional[Tuple[int, int]]:
+    """(row, kind) of the first failing row, or None.
+
+    Kinds (priority at equal row, matching the scalar per-burst order):
+    0 injected, 1 src space missing, 2 src out of bounds, 3 dst space
+    missing/generator, 4 dst out of bounds.
+    """
+    n = len(batch)
+    size_of = np.full(len(CODE_PROTO), -1, dtype=np.int64)
+    for proto, buf in mem.spaces.items():
+        size_of[PROTO_CODE[proto]] = buf.size
+
+    cands = []
+    if fail_at is not None and 0 <= fail_at < n:
+        cands.append((fail_at, 0))
+    sa, da, ln = batch.src_addr, batch.dst_addr, batch.length
+    src_sz = size_of[batch.src_proto]
+    dst_sz = size_of[batch.dst_proto]
+    dst_gen = np.isin(batch.dst_proto, _GEN_CODES)
+    for mask, kind in (
+            (~src_gen & (src_sz < 0), 1),
+            (~src_gen & ((sa < 0) | (sa + ln > src_sz)), 2),
+            (dst_gen | (dst_sz < 0), 3),
+            ((da < 0) | (da + ln > dst_sz), 4)):
+        hits = np.flatnonzero(mask)
+        if hits.size:
+            cands.append((int(hits[0]), kind))
+    if not cands:
+        return None
+    return min(cands, key=lambda c: (c[0], c[1]))
+
+
+def _raise_fault(batch: DescriptorBatch, mem: MemoryMap, row: int,
+                 kind: int) -> None:
+    b = batch.row(row)
+    if kind == 0:
+        raise TransferError(b, "injected fault", index=row)
+    if kind in (1, 3):
+        mem.space(b.src_protocol if kind == 1 else b.dst_protocol)
+        raise AssertionError("space lookup should have raised")
+    try:                 # reuse the scalar managers' exact bounds message
+        if kind == 2:
+            mem.read(b.src_protocol, b.src_addr, b.length)
+        else:
+            mem.write(b.dst_protocol, b.dst_addr,
+                      np.empty(b.length, dtype=np.uint8))
+    except IndexError as err:
+        raise TransferError(b, str(err), index=row) from None
+    raise AssertionError("bounds check should have raised")
+
+
+def execute_batch(batch: DescriptorBatch, mem: MemoryMap,
+                  instream=None, bus_width: int = 8,
+                  fail_at: Optional[int] = None,
+                  stream_base: Optional[Dict[int, int]] = None,
+                  check: bool = True) -> int:
+    """Vectorized functional back-end: run a legalized `DescriptorBatch`
+    against `mem`; returns bytes moved.  The batched sibling of `execute`
+    (which remains the scalar oracle) — property tests assert the two are
+    byte-identical.
+
+    Bursts are grouped by (src_protocol, dst_protocol); each group moves
+    through grouped gather/scatter with fancy indexing, ragged bursts
+    flattened via offset/length prefix sums and processed in
+    `EXEC_CHUNK_BYTES` slices so the index scratch stays bounded.
+    Generator (Init) sources produce their streams vectorized over the
+    whole group on the `splitmix32` path.  The in-stream accelerator, when
+    given, is applied per burst chunk, exactly as on the scalar path.
+
+    One ordering caveat: because groups move as single array ops (and
+    length bins within a group execute in ascending-length order), bursts
+    of one call must not depend on each other — no burst may read bytes
+    another burst writes (read-after-write), and overlapping *destination*
+    ranges resolve in an unspecified order (write-write).  The scalar
+    `execute` runs strictly in row order; batches with intra-call
+    dependencies are outside the equivalence contract, exactly as
+    decoupled-R/W hardware refuses to order them.
+
+    Faults — injected via `fail_at` or real (out-of-bounds rows, checked
+    vectorized before any byte moves) — raise `TransferError` with the
+    exact failing row in ``index``; rows before it have fully executed,
+    so the error handler can continue/replay from a precise position.
+    """
+    n = len(batch)
+    if n == 0:
+        return 0
+    if check:
+        check_legal_batch(batch, bus_width=bus_width)
+    src_gen = np.isin(batch.src_proto, _GEN_CODES)
+    fault = _first_fault(batch, mem, src_gen, fail_at)
+    stop = fault[0] if fault is not None else n
+
+    if stop:
+        sp, dp = batch.src_proto[:stop], batch.dst_proto[:stop]
+        if (sp == sp[0]).all() and (dp == dp[0]).all():
+            groups = [((int(sp[0]) << 8) | int(dp[0]),
+                       np.arange(stop, dtype=np.int64))]
+        else:
+            codes = (sp.astype(np.int64) << 8) | dp
+            groups = [(code, np.flatnonzero(codes == code))
+                      for code in np.unique(codes).tolist()]
+        for code, rows in groups:
+            dst_buf = mem.space(CODE_PROTO[code & 0xFF])
+            if src_gen[rows[0]]:
+                _exec_init_group(batch, rows, dst_buf, instream, stream_base)
+            else:
+                _exec_copy_group(mem.space(CODE_PROTO[code >> 8]), dst_buf,
+                                 batch.src_addr[rows], batch.dst_addr[rows],
+                                 batch.length[rows], instream)
+    moved = int(batch.length[:stop].sum())
+    if fault is not None:
+        _raise_fault(batch, mem, *fault)
     return moved

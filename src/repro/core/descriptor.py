@@ -422,6 +422,21 @@ class DescriptorBatch:
             max_burst=self.max_burst[row], reduce_len=self.reduce_len[row],
             options=opts)
 
+    def row(self, i: int) -> Transfer1D:
+        """Row `i` as a `Transfer1D`, bypassing `__post_init__` validation —
+        error reporting must be able to materialize a row whose fields are
+        exactly what the batch carries, even when they are illegal (e.g. a
+        negative address flagged by the back-end bounds check)."""
+        t = object.__new__(Transfer1D)
+        object.__setattr__(t, "src_addr", int(self.src_addr[i]))
+        object.__setattr__(t, "dst_addr", int(self.dst_addr[i]))
+        object.__setattr__(t, "length", int(self.length[i]))
+        object.__setattr__(t, "src_protocol", CODE_PROTO[int(self.src_proto[i])])
+        object.__setattr__(t, "dst_protocol", CODE_PROTO[int(self.dst_proto[i])])
+        object.__setattr__(t, "options", self.option_for(i))
+        object.__setattr__(t, "transfer_id", int(self.transfer_id[i]))
+        return t
+
     def to_transfers(self) -> List[Transfer1D]:
         """Adapter back to the object API (the slow path — for interop,
         functional execution and tests; the hot paths stay on arrays)."""

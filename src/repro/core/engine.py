@@ -29,7 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from . import simulator as sim
-from .backend import MemoryMap, TransferError, execute
+from .backend import MemoryMap, TransferError, execute_batch
 from .descriptor import (DescriptorBatch, NdTransfer, Transfer1D,
                          concat_batches)
 from .legalizer import legalize_batch, legalize_tile
@@ -254,14 +254,11 @@ class IDMAEngine:
             rec = self._record_for(tid0)
             before = self.stats.bytes_moved
             try:
+                self._run(payload)
                 if isinstance(payload, DescriptorBatch):
-                    if self.mem is not None:
-                        for t in payload.to_transfers():
-                            self._run(t)
                     count = len(payload)
                     last = int(payload.transfer_id[-1])
                 else:
-                    self._run(payload)
                     count = 1
                     last = tid0
             except TransferError:
@@ -355,29 +352,40 @@ class IDMAEngine:
         """Object-API adapter over `lower_batch` (functional path, tests)."""
         return [p.to_transfers() for p in self.lower_batch(transfer)]
 
-    def _run(self, transfer: Descriptor) -> None:
+    def _run(self, transfer: Union[Descriptor, DescriptorBatch]) -> None:
+        """Functional execution: lower to per-port burst batches and run
+        each through the vectorized back-end (`execute_batch`) — the data
+        plane never materializes `Transfer1D` objects.
+
+        The paper's error-handler verbs are expressed over burst indices:
+        `TransferError.index` names the offender inside the still-pending
+        tail, so continue skips exactly it, replay re-issues from it, and
+        duplicate identical bursts can never be mis-credited."""
         if self.mem is None:
             return
-        ports = self.lower(transfer)
-        for bursts in ports:
-            self.stats.bursts += len(bursts)
+        for port in self.lower_batch(transfer):
+            n = len(port)
+            self.stats.bursts += n
             done = 0
             replays = 0
-            while done < len(bursts):
+            while done < n:
+                fail = None
+                if self._fail_at is not None and \
+                        done <= self._fail_at < n:
+                    fail = self._fail_at - done
+                pending = port.select(np.s_[done:]) if done else port
                 try:
-                    fail = None
-                    if self._fail_at is not None and \
-                            done <= self._fail_at < len(bursts):
-                        fail = self._fail_at - done
-                    moved = execute(bursts[done:], self.mem,
-                                    bus_width=self.bus_width, fail_at=fail)
+                    moved = execute_batch(pending, self.mem,
+                                          bus_width=self.bus_width,
+                                          fail_at=fail)
                     self.stats.bytes_moved += moved
-                    done = len(bursts)
+                    done = n
                 except TransferError as err:
                     self.stats.errors += 1
-                    idx = bursts.index(err.burst, done)
-                    self.stats.bytes_moved += sum(
-                        b.length for b in bursts[done:idx])
+                    idx = done + err.index      # port-absolute offender
+                    err.index = idx
+                    self.stats.bytes_moved += int(
+                        port.length[done:idx].sum())
                     action = self.error_policy.action
                     if action == "abort":
                         raise

@@ -147,11 +147,14 @@ def legalize(transfer: Transfer1D, bus_width: int = 8,
         offset = start
         while seg > 0:
             if pow2:
-                # walk pow2-aligned inside the segment (both ports)
+                # walk pow2-aligned inside the segment (both ports); a
+                # non-pow2 user cap (max_burst/reduce_len) must round DOWN
+                # to a power of two or the walk emits illegal bursts
                 for blen in _pow2_aligned_bursts(
                         transfer.dst_addr + offset,
                         None if src_is_gen else transfer.src_addr + offset,
-                        seg, cap or _largest_pow2_leq(seg)):
+                        seg, _largest_pow2_leq(cap) if cap
+                        else _largest_pow2_leq(seg)):
                     bursts.append(transfer.shifted(offset, offset, blen))
                     offset += blen
                 seg = 0
@@ -409,6 +412,45 @@ def legalize_tile(shape: Tuple[int, int], itemsize: int,
 def legal_dma_len(length: int) -> int:
     """Round a 1-D HBM DMA length up to the efficient 512-B granule."""
     return _round_up(max(length, 1), TPU_DMA_GRANULE)
+
+
+def check_legal_batch(batch: DescriptorBatch, bus_width: int = 8) -> None:
+    """Vectorized `check_legal` over a whole `DescriptorBatch`.
+
+    Raises `ValueError` for the first offending row (lowest index), with the
+    same message the scalar checker produces for that burst.  This is the
+    legality gate of the vectorized data plane (`backend.execute_batch`);
+    the scalar `check_legal` remains the oracle the property tests compare
+    against.
+    """
+    n = len(batch)
+    if n == 0:
+        return
+    bad = np.zeros(n, dtype=bool)
+    length = batch.length
+    for proto_col, addr, is_src in ((batch.src_proto, batch.src_addr, True),
+                                    (batch.dst_proto, batch.dst_addr, False)):
+        for code in np.unique(proto_col).tolist():
+            proto = CODE_PROTO[code]
+            if is_src and proto in GENERATOR_PROTOCOLS:
+                continue
+            r = rules_for(proto, bus_width)
+            m = proto_col == code
+            a, ln = addr[m], length[m]
+            v = np.zeros(ln.shape[0], dtype=bool)
+            if r.max_burst_bytes:
+                v |= ln > r.max_burst_bytes
+            if r.page_size:
+                v |= a // r.page_size != (a + ln - 1) // r.page_size
+            if r.pow2_only:
+                v |= (ln & (ln - 1)) != 0
+                nz = ln > 0
+                v |= nz & (a % np.maximum(ln, 1) != 0)
+            bad[m] |= v
+    if bad.any():
+        i = int(np.argmax(bad))
+        check_legal([batch.row(i)], bus_width=bus_width)
+        raise ValueError(f"row {i} of the batch is not legal")  # unreachable
 
 
 def check_legal(bursts: Sequence[Transfer1D], bus_width: int = 8) -> None:

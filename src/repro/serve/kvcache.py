@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DescriptorBatch, IDMAEngine, MemoryMap, Protocol
+from repro.core import (DescriptorBatch, IDMAEngine, MemoryMap, Protocol,
+                        execute_batch, legalize_batch)
 
 
 @dataclass
@@ -195,12 +196,20 @@ class PagedKVDMA:
     engine's channels (`dispatch_batch` → `wait_all`), so decode-step
     cache movement shows up in the engine's stats and multi-channel
     timing model like any other DMA workload.
+
+    ``timing=False`` skips the engine's submission queues and cycle model
+    entirely and drives the descriptor streams straight through the
+    vectorized functional data plane (`core.backend.execute_batch`) — the
+    serving-throughput configuration: same bytes, no per-decode-step
+    timing simulation.  Engine byte/descriptor stats are still updated;
+    transfer ids are not assigned on this path.
     """
 
     def __init__(self, layout: KVLayout, max_batch: int, max_len: int,
                  engine: Optional[IDMAEngine] = None,
-                 num_channels: int = 1) -> None:
+                 num_channels: int = 1, timing: bool = True) -> None:
         self.layout = layout
+        self.timing = timing
         self.max_batch = max_batch
         self.max_len = max_len
         gather_bytes = max_batch * max_len * layout.row_bytes
@@ -246,6 +255,22 @@ class PagedKVDMA:
 
     # -- the decode-step traffic -------------------------------------------
 
+    def _move(self, desc: DescriptorBatch) -> List[int]:
+        """Route one descriptor stream: through the engine's channel
+        queues when `timing`, else straight through the vectorized
+        functional data plane (`execute_batch`)."""
+        if self.timing:
+            return self.engine.dispatch_batch(desc)
+        eng = self.engine
+        legal = legalize_batch(desc, bus_width=eng.bus_width)
+        moved = execute_batch(legal, eng.mem, bus_width=eng.bus_width,
+                              check=False)
+        eng.stats.submitted += len(desc)
+        eng.stats.completed += len(desc)
+        eng.stats.bursts += len(legal)
+        eng.stats.bytes_moved += moved
+        return []
+
     def append(self, page_table: np.ndarray, pos: int,
                k: np.ndarray, v: np.ndarray) -> List[int]:
         """Scatter one token's (B, Hkv, dh) K/V rows into the pools.
@@ -261,12 +286,13 @@ class PagedKVDMA:
         vb = np.ascontiguousarray(v).view(np.uint8).reshape(-1)
         vmem[self._sk:self._sk + kb.size] = kb
         vmem[self._sv:self._sv + vb.size] = vb
-        ids = self.engine.dispatch_batch(append_descriptors(
+        ids = self._move(append_descriptors(
             lay, page_table, pos, src_base=self._sk, pool_base=0))
-        ids += self.engine.dispatch_batch(append_descriptors(
+        ids += self._move(append_descriptors(
             lay, page_table, pos, src_base=self._sv,
             pool_base=lay.pool_bytes))
-        self.engine.wait_all()
+        if self.timing:
+            self.engine.wait_all()
         return ids
 
     def gather(self, page_table: np.ndarray, max_len: int
@@ -283,12 +309,13 @@ class PagedKVDMA:
             raise ValueError(
                 f"gather ({B}, {L}) exceeds the ({self.max_batch}, "
                 f"{self.max_len}) VMEM region this cache was sized for")
-        self.engine.dispatch_batch(gather_descriptors(
+        self._move(gather_descriptors(
             lay, page_table, max_len, pool_base=0, dst_base=self._gk))
-        self.engine.dispatch_batch(gather_descriptors(
+        self._move(gather_descriptors(
             lay, page_table, max_len, pool_base=lay.pool_bytes,
             dst_base=self._gv))
-        self.engine.wait_all()
+        if self.timing:
+            self.engine.wait_all()
 
         vmem = self.mem.spaces[Protocol.VMEM]
         nbytes = B * L * lay.row_bytes

@@ -26,12 +26,12 @@ def layout():
     return KVLayout(N_PAGES, PAGE_SIZE, HKV, DH, itemsize=4)
 
 
-def run_both_paths(seed=0, num_channels=1):
+def run_both_paths(seed=0, num_channels=1, timing=True):
     rng = np.random.default_rng(seed)
     pool = init_paged_kv(N_PAGES, PAGE_SIZE, HKV, DH, dtype=jnp.float32)
     tables = make_page_tables(PagePool(N_PAGES, PAGE_SIZE), B, STEPS)
     dma = PagedKVDMA(layout(), max_batch=B, max_len=STEPS,
-                     num_channels=num_channels)
+                     num_channels=num_channels, timing=timing)
     for pos in range(STEPS):
         k = rng.standard_normal((B, HKV, DH)).astype(np.float32)
         v = rng.standard_normal((B, HKV, DH)).astype(np.float32)
@@ -55,6 +55,20 @@ class TestPagedKVDMA:
         assert np.array_equal(k_ref, k_dma)
         assert np.array_equal(v_ref, v_dma)
         assert len(dma.engine.last_channel_result.per_channel) == 4
+
+    def test_functional_only_path_same_bytes(self):
+        """timing=False drives the same descriptors straight through the
+        vectorized data plane (`execute_batch`): identical bytes, no
+        timing simulation, byte stats still tracked."""
+        (k_ref, v_ref), (k_dma, v_dma), dma = run_both_paths(seed=5,
+                                                             timing=False)
+        assert np.array_equal(k_ref, k_dma)
+        assert np.array_equal(v_ref, v_dma)
+        assert dma.engine.last_channel_result is None     # no cycle model
+        lay = layout()
+        want = (STEPS * B * lay.row_bytes * 2
+                + B * (STEPS // PAGE_SIZE) * lay.page_bytes * 2)
+        assert dma.engine.stats.bytes_moved == want
 
     def test_traffic_is_engine_transfers(self):
         _, _, dma = run_both_paths(seed=2)
