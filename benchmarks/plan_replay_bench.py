@@ -1,0 +1,138 @@
+"""Plan-replay benchmark: compile-once / replay-many paged-KV decode.
+
+The steady-state serving loop re-submits structurally identical
+append/gather descriptor batches every decode step with only page-table
+base addresses changed.  This suite drives `PagedKVDMA` (functional
+serving configuration, ``timing=False``) through a >= 1024-step decode
+loop over realistic (shuffled-allocation) page tables twice:
+
+* **uncached** — every submission runs `legalize_batch` + grouped
+  `execute_batch`, exactly the PR-3 data plane;
+* **cached**   — the per-`KVLayout` plan templates (`core.plan`): capture
+  on the first step, then every submission is a vectorized
+  ``base[desc] + offset`` rebind replayed with frozen grouping hints.
+
+Both loops append one token per step (K and V in ONE descriptor batch —
+one doorbell) and gather a sliding attention window of whole pages, the
+decode access pattern of a windowed-attention server.  The benchmark
+asserts byte-identity between the two loops — every per-step gather
+result and the final physical pools — and gates the cached loop at
+**>= 5x** over the uncached one.  Cycle-identity of replayed plans is
+covered by `tests/test_plan.py`.
+
+Results land in ``LAST`` for ``benchmarks/run.py --json`` / the
+``BENCH_<n>.json`` perf-trajectory snapshots.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.analytics import plan_cache_profile
+from repro.serve.kvcache import KVLayout, PagedKVDMA, PagePool, \
+    make_page_tables
+
+STEPS = 1024
+B = 8                        # decode batch (sequences)
+WINDOW_PAGES = 8             # gathered attention window, in pages
+PAGE_SIZE = 2                # tokens per page
+HKV, DH, ITEMSIZE = 1, 8, 2  # row_bytes = 16 B, page_bytes = 32 B
+GATE = 5.0
+
+#: last run's headline numbers, for `benchmarks.run --json`
+LAST = {}
+
+
+def _setup(seed: int = 0):
+    """Layout, shuffled page tables and pregenerated token stream."""
+    rng = np.random.default_rng(seed)
+    prefill = WINDOW_PAGES * PAGE_SIZE
+    total_tokens = prefill + STEPS
+    pages_per_seq = -(-total_tokens // PAGE_SIZE)
+    n_pages = B * pages_per_seq
+    layout = KVLayout(n_pages, PAGE_SIZE, HKV, DH, itemsize=ITEMSIZE)
+    alloc = PagePool(n_pages, PAGE_SIZE)
+    rng.shuffle(alloc.free)              # realistic, non-linear allocation
+    tables = make_page_tables(alloc, B, total_tokens)
+    kv = rng.standard_normal((total_tokens, 2, B, HKV, DH)) \
+        .astype(np.float16)
+    return layout, tables, kv, prefill
+
+
+def _decode_loop(layout, tables, kv, prefill, plan_cache):
+    """One full decode run; returns (elapsed_s, per-step gather digests,
+    final pools, dma)."""
+    window = WINDOW_PAGES * PAGE_SIZE
+    dma = PagedKVDMA(layout, max_batch=B, max_len=window, timing=False,
+                     plan_cache=plan_cache)
+    # prefill the first window outside the timed region
+    for pos in range(prefill):
+        dma.append(tables, pos, kv[pos, 0], kv[pos, 1])
+
+    outs = []
+    t0 = time.perf_counter()
+    for step in range(STEPS):
+        pos = prefill + step
+        dma.append(tables, pos, kv[pos, 0], kv[pos, 1])
+        p0 = (pos + 1) // PAGE_SIZE - WINDOW_PAGES     # sliding window
+        k, v = dma.gather(tables[:, p0:p0 + WINDOW_PAGES], window)
+        outs.append((k, v))
+    elapsed = time.perf_counter() - t0
+    pools = (dma._pool("k").copy(), dma._pool("v").copy())
+    return elapsed, outs, pools, dma
+
+
+REPEATS = 3                  # best-of-N wall clocks (identical runs)
+
+
+def run(csv_rows):
+    layout, tables, kv, prefill = _setup()
+
+    t_uncached = t_cached = float("inf")
+    for _ in range(REPEATS):
+        t, outs_u, pools_u, _ = _decode_loop(
+            layout, tables, kv, prefill, plan_cache=False)
+        t_uncached = min(t_uncached, t)
+        t, outs_c, pools_c, dma = _decode_loop(
+            layout, tables, kv, prefill, plan_cache=True)
+        t_cached = min(t_cached, t)
+
+    # byte-identity: every per-step gather and the final physical pools
+    for step, ((ku, vu), (kc, vc)) in enumerate(zip(outs_u, outs_c)):
+        assert np.array_equal(ku, kc) and np.array_equal(vu, vc), \
+            f"plan replay diverged from the uncached path at step {step}"
+    assert np.array_equal(pools_u[0], pools_c[0])
+    assert np.array_equal(pools_u[1], pools_c[1])
+
+    speedup = t_uncached / t_cached
+    profile = plan_cache_profile(dma.plan_cache)
+    steps_per_s = STEPS / t_cached
+    csv_rows.append(("plan_replay_decode_steps", STEPS, ""))
+    csv_rows.append(("plan_replay_uncached_s", t_uncached, ""))
+    csv_rows.append(("plan_replay_cached_s", t_cached, ""))
+    csv_rows.append(("plan_replay_speedup", speedup,
+                     f"target>={GATE:g}x"))
+    csv_rows.append(("plan_replay_cached_steps_per_s", steps_per_s, ""))
+    csv_rows.append(("plan_replay_hit_rate", profile["hit_rate"], ""))
+
+    LAST.update({
+        "decode_steps": STEPS,
+        "batch": B,
+        "window_pages": WINDOW_PAGES,
+        "uncached_s": t_uncached,
+        "cached_s": t_cached,
+        "speedup": speedup,
+        "cached_steps_per_s": steps_per_s,
+        "plan_cache": profile,
+    })
+    assert speedup >= GATE, \
+        f"plan replay only {speedup:.2f}x over uncached (need >= {GATE:g}x)"
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")

@@ -7,8 +7,13 @@ optional dependency of an unrelated suite (jax, repro.dist) is missing.
 
 `--json [PATH]` additionally writes the descriptor-plane perf headline
 (object-vs-batch speedup, sweep wall clocks) plus per-suite wall-clock
-timings to PATH (default ``BENCH_descriptor_plane.json``) so the perf
-trajectory is tracked across PRs.
+timings to PATH (default ``BENCH_descriptor_plane.json``), and — unless
+``--no-snapshot`` — a numbered ``BENCH_<n>.json`` snapshot at the repo
+root (schema: suite name → that suite's ``LAST`` metrics dict, plus a
+``_meta`` record) so the perf trajectory is tracked across PRs.  ``<n>``
+auto-increments past the highest existing snapshot; pin it with
+``--snapshot N``.  Partial runs (``--only``) skip the numbered snapshot
+unless an index is pinned explicitly.
 """
 
 from __future__ import annotations
@@ -16,6 +21,8 @@ from __future__ import annotations
 import argparse
 import importlib
 import json
+import os
+import re
 import sys
 import time
 
@@ -29,6 +36,7 @@ SUITES = [
     ("descriptor_plane", "SoA vs object descriptor hot path"),
     ("dataplane", "vectorized functional data plane (execute_batch)"),
     ("channel_sweep", "multi-channel aggregate bandwidth (§4 concurrency)"),
+    ("plan_replay", "compile-once / replay-many paged-KV decode"),
     ("kernel_bench", "kernels + TPU rooflines"),
     ("roofline", "dry-run roofline table"),
 ]
@@ -37,6 +45,38 @@ SUITES = [
 _MODULES = {name: f"benchmarks.{name}" for name, _ in SUITES}
 _MODULES["descriptor_plane"] = "benchmarks.descriptor_plane_bench"
 _MODULES["dataplane"] = "benchmarks.dataplane_bench"
+_MODULES["plan_replay"] = "benchmarks.plan_replay_bench"
+
+
+#: repo root — numbered snapshots always land here (not the cwd), so the
+#: cross-PR trajectory keeps one consistent numbering
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _next_snapshot_index(root: str = _REPO_ROOT) -> int:
+    """1 + the highest existing BENCH_<n>.json index at the repo root."""
+    best = 0
+    for name in os.listdir(root):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", name)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best + 1
+
+
+def write_snapshot(suite_metrics, wall, errors, index=None) -> str:
+    """Write the numbered perf-trajectory snapshot (suite → metrics)."""
+    if index is None:
+        index = _next_snapshot_index()
+    payload = dict(suite_metrics)
+    payload["_meta"] = {
+        "index": index,
+        "suite_wall_clock_s": wall,
+        **({"suite_errors": errors} if errors else {}),
+    }
+    path = os.path.join(_REPO_ROOT, f"BENCH_{index}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
 
 
 def main() -> None:
@@ -45,6 +85,10 @@ def main() -> None:
     ap.add_argument("--json", nargs="?", const="BENCH_descriptor_plane.json",
                     default=None, metavar="PATH",
                     help="write descriptor-plane perf + suite wall clocks")
+    ap.add_argument("--snapshot", type=int, default=None, metavar="N",
+                    help="pin the BENCH_<n>.json snapshot index")
+    ap.add_argument("--no-snapshot", action="store_true",
+                    help="skip the numbered BENCH_<n>.json snapshot")
     args = ap.parse_args()
 
     rows = []
@@ -78,17 +122,27 @@ def main() -> None:
             payload["suite_errors"] = errors
         # persist any suite's module-level LAST dict (partial data survives
         # a failed gate; import-time failures are already in suite_errors)
+        suite_metrics = {}
         for name in sorted(set(wall) | set(errors)):
             try:
                 last = getattr(importlib.import_module(_MODULES[name]),
                                "LAST", None)
                 if last:
-                    payload[name] = dict(last)
+                    suite_metrics[name] = dict(last)
             except Exception:
                 pass
+        payload.update(suite_metrics)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
+        # numbered trajectory snapshots only make sense for full runs —
+        # a partial --only run would mint an index whose metrics are not
+        # comparable to the committed full-run snapshots
+        if not args.no_snapshot and \
+                (args.only is None or args.snapshot is not None):
+            snap = write_snapshot(suite_metrics, wall, errors,
+                                  index=args.snapshot)
+            print(f"# wrote {snap}", file=sys.stderr)
 
     if errors:
         sys.exit(1)        # after persisting partial results

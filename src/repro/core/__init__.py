@@ -19,10 +19,14 @@ from .midend import (coalesce_nd, iter_tensor_nd, mp_dist, mp_dist_batch,
                      split_and_distribute, tensor_2d, tensor_nd,
                      tensor_nd_batch)
 from .frontend import (DescFrontend, InstFrontend, RegFrontend, write_chain)
-from .backend import (MemoryMap, TransferError, execute, execute_batch,
-                      init_stream, splitmix32, splitmix64)
-from .engine import (CompletionRecord, ErrorPolicy, IDMAEngine, TilePlan,
-                     plan_nd_copy)
+from .backend import (ExecHints, MemoryMap, TransferError, build_exec_hints,
+                      execute, execute_batch, init_stream, splitmix32,
+                      splitmix64)
+from .plan import (PlanCache, PlanCacheStats, TransferPlan, capture_nd_plan,
+                   capture_plan, nd_plan_signature, plan_signature,
+                   simulate_plan, structure_modulus)
+from .engine import (CompletionRecord, ErrorPolicy, IDMAEngine, LoweredPort,
+                     TilePlan, plan_nd_copy)
 from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, ChannelSimResult,
                         EngineConfig, MemSystem, SimResult,
                         cheshire_idma_config, fragmented_copy,
@@ -44,10 +48,13 @@ __all__ = [
     "mp_dist_tree", "mp_split", "mp_split_batch", "rt_schedule",
     "split_and_distribute", "tensor_2d", "tensor_nd", "tensor_nd_batch",
     "DescFrontend", "InstFrontend", "RegFrontend", "write_chain",
-    "MemoryMap", "TransferError", "execute", "execute_batch", "init_stream",
-    "splitmix32", "splitmix64",
-    "CompletionRecord", "ErrorPolicy", "IDMAEngine", "TilePlan",
-    "plan_nd_copy",
+    "ExecHints", "MemoryMap", "TransferError", "build_exec_hints",
+    "execute", "execute_batch", "init_stream", "splitmix32", "splitmix64",
+    "PlanCache", "PlanCacheStats", "TransferPlan", "capture_nd_plan",
+    "capture_plan", "nd_plan_signature", "plan_signature", "simulate_plan",
+    "structure_modulus",
+    "CompletionRecord", "ErrorPolicy", "IDMAEngine", "LoweredPort",
+    "TilePlan", "plan_nd_copy",
     "HBM", "PULP_L2", "RPC_DRAM", "SRAM", "ChannelSimResult",
     "EngineConfig", "MemSystem", "SimResult", "cheshire_idma_config",
     "fragmented_copy", "fragmented_copy_reference",

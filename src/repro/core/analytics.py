@@ -201,6 +201,30 @@ def burst_profile(batch: DescriptorBatch, bus_width: int = 4
     }
 
 
+def plan_cache_profile(cache) -> Dict[str, float]:
+    """Transparent hit/miss statistics of a `core.plan.PlanCache`.
+
+    One flat dict (benchmark-/JSON-friendly): lookup counters, hit rate,
+    resident plan count, and the aggregate size of the frozen burst
+    streams — the compile-once work that replays are amortizing.
+    """
+    stats = cache.stats
+    plans = cache.plans
+    replays = sum(p.replays for p in plans)
+    return {
+        "lookups": stats.lookups,
+        "hits": stats.hits,
+        "misses": stats.misses,
+        "evictions": stats.evictions,
+        "bypasses": stats.bypasses,
+        "hit_rate": stats.hit_rate,
+        "resident_plans": len(plans),
+        "resident_bursts": sum(p.n_bursts for p in plans),
+        "resident_bytes": sum(p.total_bytes for p in plans),
+        "replays_resident": replays,
+    }
+
+
 # --------------------------------------------------------------------------
 # Timing model — longest path in ns (multiplicative inverse of frequency)
 # --------------------------------------------------------------------------

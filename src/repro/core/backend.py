@@ -291,11 +291,16 @@ def _length_bins(lens: np.ndarray):
 
 def _exec_copy_group(src_buf: np.ndarray, dst_buf: np.ndarray,
                      sa: np.ndarray, da: np.ndarray, lens: np.ndarray,
-                     instream) -> None:
+                     instream, bins=None) -> None:
     """Grouped gather/scatter: every burst of one (src, dst) protocol pair
-    moved with two fancy-indexed array ops per length bin / chunk."""
+    moved with two fancy-indexed array ops per length bin / chunk.
+
+    `bins` — precomputed `_length_bins(lens)` output (a captured plan's
+    grouping); row indices are local to `sa`/`da`/`lens`.
+    """
     if instream is None:
-        for length, rows in _length_bins(lens):
+        for length, rows in (bins if bins is not None
+                             else _length_bins(lens)):
             span = np.arange(length, dtype=np.int64)
             step = max(EXEC_CHUNK_BYTES // length, 1)
             for i in range(0, rows.shape[0], step):
@@ -307,6 +312,54 @@ def _exec_copy_group(src_buf: np.ndarray, dst_buf: np.ndarray,
         data = src_buf[np.repeat(sa[sl], lens[sl]) + pos]
         data = _apply_instream(data, splits, instream)
         dst_buf[np.repeat(da[sl], lens[sl]) + pos] = data
+
+
+@dataclass(eq=False, repr=False)
+class ExecHints:
+    """Precomputed grouping of a legalized `DescriptorBatch` for
+    `execute_batch` — the data-plane half of a captured transfer plan.
+
+    ``groups`` mirrors the batched back-end's protocol-pair grouping:
+    one ``(code, rows, bins)`` triple per (src, dst) protocol pair, where
+    ``code = (src_proto << 8) | dst_proto``, ``rows`` are the batch rows of
+    the group (ascending), and ``bins`` is the materialized
+    `_length_bins` output over ``length[rows]`` (``None`` for generator
+    groups, which recompute).  ``src_gen`` is the per-row generator-source
+    mask.  Hints are only valid for the exact batch *structure* they were
+    built from (row count, lengths, protocol columns) — addresses may
+    differ, which is what plan replay relies on.
+    """
+
+    groups: List[Tuple[int, np.ndarray,
+                       Optional[List[Tuple[int, np.ndarray]]]]]
+    src_gen: np.ndarray
+    dst_gen: Optional[np.ndarray] = None
+
+
+def build_exec_hints(batch: DescriptorBatch) -> ExecHints:
+    """Materialize `execute_batch`'s grouping decisions for `batch` so a
+    replayed plan pays none of them per submission."""
+    n = len(batch)
+    src_gen = np.isin(batch.src_proto, _GEN_CODES)
+    dst_gen = np.isin(batch.dst_proto, _GEN_CODES)
+    groups: List[Tuple[int, np.ndarray,
+                       Optional[List[Tuple[int, np.ndarray]]]]] = []
+    if n:
+        sp, dp = batch.src_proto, batch.dst_proto
+        if (sp == sp[0]).all() and (dp == dp[0]).all():
+            pairs = [((int(sp[0]) << 8) | int(dp[0]),
+                      np.arange(n, dtype=np.int64))]
+        else:
+            codes = (sp.astype(np.int64) << 8) | dp
+            pairs = [(code, np.flatnonzero(codes == code))
+                     for code in np.unique(codes).tolist()]
+        for code, rows in pairs:
+            if src_gen[rows[0]]:
+                groups.append((code, rows, None))
+            else:
+                bins = list(_length_bins(batch.length[rows]))
+                groups.append((code, rows, bins))
+    return ExecHints(groups=groups, src_gen=src_gen, dst_gen=dst_gen)
 
 
 def _init_params(batch: DescriptorBatch, rows: np.ndarray
@@ -408,25 +461,43 @@ def _exec_init_group(batch: DescriptorBatch, rows: np.ndarray,
 
 
 def _first_fault(batch: DescriptorBatch, mem: MemoryMap, src_gen: np.ndarray,
-                 fail_at: Optional[int]) -> Optional[Tuple[int, int]]:
+                 fail_at: Optional[int],
+                 dst_gen: Optional[np.ndarray] = None
+                 ) -> Optional[Tuple[int, int]]:
     """(row, kind) of the first failing row, or None.
 
     Kinds (priority at equal row, matching the scalar per-burst order):
     0 injected, 1 src space missing, 2 src out of bounds, 3 dst space
     missing/generator, 4 dst out of bounds.
+
+    The no-fault case (every replayed submission in steady state) takes a
+    single combined-mask `.any()` scan — the plan layer's cheap bounds
+    revalidation; the kind/priority decomposition below only runs once a
+    fault is known to exist.  `dst_gen` optionally carries the
+    `ExecHints` precomputed generator mask (np.isin is the single most
+    expensive term of the scan).
     """
     n = len(batch)
     size_of = np.full(len(CODE_PROTO), -1, dtype=np.int64)
     for proto, buf in mem.spaces.items():
         size_of[PROTO_CODE[proto]] = buf.size
 
-    cands = []
-    if fail_at is not None and 0 <= fail_at < n:
-        cands.append((fail_at, 0))
     sa, da, ln = batch.src_addr, batch.dst_addr, batch.length
     src_sz = size_of[batch.src_proto]
     dst_sz = size_of[batch.dst_proto]
-    dst_gen = np.isin(batch.dst_proto, _GEN_CODES)
+    if dst_gen is None:
+        dst_gen = np.isin(batch.dst_proto, _GEN_CODES)
+
+    if fail_at is None:
+        ok_src = src_gen | ((src_sz >= 0) & (sa >= 0) & (sa + ln <= src_sz))
+        bad = (~ok_src | dst_gen | (dst_sz < 0)
+               | (da < 0) | (da + ln > dst_sz))
+        if not bad.any():
+            return None
+
+    cands = []
+    if fail_at is not None and 0 <= fail_at < n:
+        cands.append((fail_at, 0))
     for mask, kind in (
             (~src_gen & (src_sz < 0), 1),
             (~src_gen & ((sa < 0) | (sa + ln > src_sz)), 2),
@@ -463,7 +534,8 @@ def execute_batch(batch: DescriptorBatch, mem: MemoryMap,
                   instream=None, bus_width: int = 8,
                   fail_at: Optional[int] = None,
                   stream_base: Optional[Dict[int, int]] = None,
-                  check: bool = True) -> int:
+                  check: bool = True,
+                  hints: Optional[ExecHints] = None) -> int:
     """Vectorized functional back-end: run a legalized `DescriptorBatch`
     against `mem`; returns bytes moved.  The batched sibling of `execute`
     (which remains the scalar oracle) — property tests assert the two are
@@ -490,33 +562,45 @@ def execute_batch(batch: DescriptorBatch, mem: MemoryMap,
     vectorized before any byte moves) — raise `TransferError` with the
     exact failing row in ``index``; rows before it have fully executed,
     so the error handler can continue/replay from a precise position.
+
+    `hints` — precomputed `ExecHints` for exactly this batch structure (a
+    captured plan's grouping); ignored when a fault truncates the batch or
+    an in-stream accelerator forces the ragged path.
     """
     n = len(batch)
     if n == 0:
         return 0
     if check:
         check_legal_batch(batch, bus_width=bus_width)
-    src_gen = np.isin(batch.src_proto, _GEN_CODES)
-    fault = _first_fault(batch, mem, src_gen, fail_at)
+    src_gen = hints.src_gen if hints is not None \
+        else np.isin(batch.src_proto, _GEN_CODES)
+    fault = _first_fault(batch, mem, src_gen, fail_at,
+                         dst_gen=hints.dst_gen if hints is not None
+                         else None)
     stop = fault[0] if fault is not None else n
+    if hints is not None and (stop != n or instream is not None):
+        hints = None                       # grouping no longer matches
 
     if stop:
-        sp, dp = batch.src_proto[:stop], batch.dst_proto[:stop]
-        if (sp == sp[0]).all() and (dp == dp[0]).all():
-            groups = [((int(sp[0]) << 8) | int(dp[0]),
-                       np.arange(stop, dtype=np.int64))]
+        if hints is not None:
+            groups = hints.groups
         else:
-            codes = (sp.astype(np.int64) << 8) | dp
-            groups = [(code, np.flatnonzero(codes == code))
-                      for code in np.unique(codes).tolist()]
-        for code, rows in groups:
+            sp, dp = batch.src_proto[:stop], batch.dst_proto[:stop]
+            if (sp == sp[0]).all() and (dp == dp[0]).all():
+                groups = [((int(sp[0]) << 8) | int(dp[0]),
+                           np.arange(stop, dtype=np.int64), None)]
+            else:
+                codes = (sp.astype(np.int64) << 8) | dp
+                groups = [(code, np.flatnonzero(codes == code), None)
+                          for code in np.unique(codes).tolist()]
+        for code, rows, bins in groups:
             dst_buf = mem.space(CODE_PROTO[code & 0xFF])
             if src_gen[rows[0]]:
                 _exec_init_group(batch, rows, dst_buf, instream, stream_base)
             else:
                 _exec_copy_group(mem.space(CODE_PROTO[code >> 8]), dst_buf,
                                  batch.src_addr[rows], batch.dst_addr[rows],
-                                 batch.length[rows], instream)
+                                 batch.length[rows], instream, bins=bins)
     moved = int(batch.length[:stop].sum())
     if fault is not None:
         _raise_fault(batch, mem, *fault)

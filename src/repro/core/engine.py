@@ -29,13 +29,28 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from . import simulator as sim
-from .backend import MemoryMap, TransferError, execute_batch
+from .backend import ExecHints, MemoryMap, TransferError, execute_batch
 from .descriptor import (DescriptorBatch, NdTransfer, Transfer1D,
                          concat_batches)
 from .legalizer import legalize_batch, legalize_tile
 from .midend import mp_dist_batch, mp_split_batch, tensor_nd_batch
+from .plan import PlanCache
 
 Descriptor = Union[Transfer1D, NdTransfer]
+
+
+@dataclass
+class LoweredPort:
+    """One back-end port's legalized burst stream plus the captured-plan
+    artifacts that let both fabrics skip recomputation on replayed
+    submissions: `prechecked` marks streams whose legality was gated by
+    `check_legal_batch` at plan capture, `beats` feeds the timing model,
+    `hints` the functional back-end."""
+
+    batch: DescriptorBatch
+    prechecked: bool = False
+    beats: Optional[np.ndarray] = None
+    hints: Optional[ExecHints] = None
 
 
 @dataclass
@@ -98,6 +113,7 @@ class IDMAEngine:
         num_channels: int = 1,
         channel_scheme: str = "round_robin",
         channel_boundary: int = 0,
+        plan_cache: Optional[PlanCache] = None,
     ) -> None:
         if num_backends > 1 and backend_boundary <= 0:
             raise ValueError("multi-back-end engines need backend_boundary")
@@ -118,6 +134,12 @@ class IDMAEngine:
         self.num_channels = num_channels
         self.channel_scheme = channel_scheme
         self.channel_boundary = channel_boundary
+        #: opt-in compile-once / replay-many submission pipeline: when set,
+        #: structurally repeated submissions skip the mid-end/legalizer
+        #: entirely (plan capture → address rebind; see `core.plan`).
+        #: Custom object-level mid-ends and multi-back-end splits are not
+        #: plannable — those engines bypass the cache per submission.
+        self.plan_cache = plan_cache
         self.stats = EngineStats()
         self._next_id = 1
         self._last_completed = 0
@@ -231,20 +253,35 @@ class IDMAEngine:
             return sim.ChannelSimResult(
                 per_channel=[], aggregate=sim.SimResult(0, 0, 0, 0, 0))
 
-        # -- timing fabric: one legalized stream per channel --------------
+        # -- lower every queued payload exactly once ----------------------
         # every payload runs the same lowering pipeline (mid-ends,
-        # mp_split/mp_dist, legalizer) as the functional fabric; the
-        # per-back-end ports of one payload are merged back into the
-        # channel stream (exact for num_backends == 1)
+        # mp_split/mp_dist, legalizer — or a captured-plan rebind) for
+        # both fabrics; the per-back-end ports of one payload are merged
+        # back into the channel stream (exact for num_backends == 1).
+        # Plan-lowered payloads carry precomputed beat counts, which feed
+        # the channel model whenever a whole channel stream has them.
+        lowered: Dict[int, List[LoweredPort]] = {}
         streams = []
+        stream_beats = []
+        beats_ok = self.sim_config.bus_width == self.bus_width
         for q in self._queues:
-            parts = []
-            for _, _, payload in q:
-                parts.extend(self.lower_batch(payload))
-            streams.append(concat_batches(parts))
+            parts: List[LoweredPort] = []
+            for tid0, _, payload in q:
+                lps = self._lower_ports(payload)
+                lowered[tid0] = lps
+                parts.extend(lps)
+            nonempty = [lp for lp in parts if len(lp.batch)]
+            streams.append(concat_batches([lp.batch for lp in nonempty]))
+            if beats_ok and nonempty and \
+                    all(lp.beats is not None for lp in nonempty):
+                stream_beats.append(
+                    nonempty[0].beats if len(nonempty) == 1 else
+                    np.concatenate([lp.beats for lp in nonempty]))
+            else:
+                stream_beats.append(None)
         result = sim.simulate_channels(
             streams, self.sim_config, (self.src_system, self.dst_system),
-            already_legal=True)
+            already_legal=True, beats=stream_beats)
         self.last_channel_result = result
 
         # -- functional fabric: drain in submission (tid) order -----------
@@ -254,7 +291,7 @@ class IDMAEngine:
             rec = self._record_for(tid0)
             before = self.stats.bytes_moved
             try:
-                self._run(payload)
+                self._run_ports(lowered[tid0])
                 if isinstance(payload, DescriptorBatch):
                     count = len(payload)
                     last = int(payload.transfer_id[-1])
@@ -323,6 +360,40 @@ class IDMAEngine:
     def lower_batch(self, transfer: Union[Descriptor, DescriptorBatch]
                     ) -> List[DescriptorBatch]:
         """Descriptor (or whole batch) → per-back-end legalized burst
+        batches (no execution) — thin adapter over `_lower_ports`, so a
+        configured plan cache serves this path too."""
+        return [lp.batch for lp in self._lower_ports(transfer)]
+
+    def _lower_ports(self, transfer: Union[Descriptor, DescriptorBatch]
+                     ) -> List[LoweredPort]:
+        """The lowering pipeline, plan-cache first.
+
+        With a `plan_cache` configured (and a plannable engine: no custom
+        object-level mid-ends, single back-end), a submission whose
+        structural signature was seen before never touches the mid-end or
+        legalizer — the captured plan is rebound to this submission's
+        addresses, and the frozen beat counts / execution hints ride along
+        for the two fabrics.  Everything else takes `_lower_uncached`.
+        """
+        pc = self.plan_cache
+        if pc is not None:
+            if not self.midends and self.num_backends == 1:
+                if isinstance(transfer, NdTransfer):
+                    legal, plan = pc.replay_nd(transfer,
+                                               bus_width=self.bus_width)
+                else:
+                    if isinstance(transfer, Transfer1D):
+                        transfer = DescriptorBatch.from_transfers([transfer])
+                    legal, plan = pc.replay_batch(transfer,
+                                                  bus_width=self.bus_width)
+                return [LoweredPort(legal, prechecked=True,
+                                    beats=plan.beats, hints=plan.hints)]
+            pc.stats.bypasses += 1
+        return [LoweredPort(b) for b in self._lower_uncached(transfer)]
+
+    def _lower_uncached(self, transfer: Union[Descriptor, DescriptorBatch]
+                        ) -> List[DescriptorBatch]:
+        """Descriptor (or whole batch) → per-back-end legalized burst
         batches (no execution).
 
         The whole mid-end → mp_split → mp_dist → legalizer pipeline runs on
@@ -353,31 +424,54 @@ class IDMAEngine:
         return [p.to_transfers() for p in self.lower_batch(transfer)]
 
     def _run(self, transfer: Union[Descriptor, DescriptorBatch]) -> None:
-        """Functional execution: lower to per-port burst batches and run
-        each through the vectorized back-end (`execute_batch`) — the data
-        plane never materializes `Transfer1D` objects.
+        """Functional execution of one descriptor/batch (adapter over
+        `_lower_ports` + `_run_ports` for callers outside `wait_all`)."""
+        self._run_ports(self._lower_ports(transfer))
+
+    def _stuck_state(self) -> str:
+        """One-line queue/channel state for the drain progress guard."""
+        depths = ", ".join(f"ch{c}={len(q)}" for c, q in
+                           enumerate(self._queues))
+        return (f"queue depths [{depths}], stats={self.stats}, "
+                f"error_policy={self.error_policy.action!r}")
+
+    def _run_ports(self, ports: List[LoweredPort]) -> None:
+        """Run lowered per-port burst batches through the vectorized
+        back-end (`execute_batch`) — the data plane never materializes
+        `Transfer1D` objects.  Plan-lowered ports skip the per-call
+        legality check (gated once at capture) and reuse the frozen
+        grouping hints.
 
         The paper's error-handler verbs are expressed over burst indices:
         `TransferError.index` names the offender inside the still-pending
         tail, so continue skips exactly it, replay re-issues from it, and
-        duplicate identical bursts can never be mis-credited."""
+        duplicate identical bursts can never be mis-credited.  The drain
+        loop is guarded: if the error handler stops advancing `done`
+        (e.g. a malformed `TransferError` with a negative index on an
+        inconsistent queue), it raises `RuntimeError` with the stuck
+        channel/queue state instead of spinning forever."""
         if self.mem is None:
             return
-        for port in self.lower_batch(transfer):
+        for lp in ports:
+            port = lp.batch
             n = len(port)
             self.stats.bursts += n
             done = 0
             replays = 0
+            no_progress = 0
+            progress_limit = max(3, self.error_policy.max_replays + 1)
             while done < n:
+                before_done = done
                 fail = None
                 if self._fail_at is not None and \
                         done <= self._fail_at < n:
                     fail = self._fail_at - done
                 pending = port.select(np.s_[done:]) if done else port
                 try:
-                    moved = execute_batch(pending, self.mem,
-                                          bus_width=self.bus_width,
-                                          fail_at=fail)
+                    moved = execute_batch(
+                        pending, self.mem, bus_width=self.bus_width,
+                        fail_at=fail, check=not lp.prechecked,
+                        hints=lp.hints if done == 0 else None)
                     self.stats.bytes_moved += moved
                     done = n
                 except TransferError as err:
@@ -392,25 +486,35 @@ class IDMAEngine:
                     if action == "continue":
                         self._fail_at = None
                         done = idx + 1          # skip the offending burst
-                        continue
-                    # replay
-                    replays += 1
-                    self.stats.replays += 1
-                    if replays > self.error_policy.max_replays:
-                        raise
-                    self._fail_at = None        # fault cleared on replay
-                    done = idx                  # re-issue the same burst
+                    else:                       # replay
+                        replays += 1
+                        self.stats.replays += 1
+                        if replays > self.error_policy.max_replays:
+                            raise
+                        self._fail_at = None    # fault cleared on replay
+                        done = idx              # re-issue the same burst
+                if done <= before_done:
+                    no_progress += 1
+                    if no_progress > progress_limit:
+                        raise RuntimeError(
+                            f"drain loop stuck at burst {done}/{n} after "
+                            f"{no_progress} no-progress iterations; "
+                            + self._stuck_state())
+                else:
+                    no_progress = 0
 
     # -- timing fabric ---------------------------------------------------------
 
     def simulate(self, transfer: Descriptor) -> sim.SimResult:
         """Cycle model of this engine executing `transfer` (single port) or
         the max over ports (multi-back-end: ports run in parallel)."""
-        ports = self.lower_batch(transfer)
+        ports = self._lower_ports(transfer)
+        beats_ok = self.sim_config.bus_width == self.bus_width
         results = [
-            sim.simulate_batch(bursts, self.sim_config, self.src_system,
-                               self.dst_system, already_legal=True)
-            for bursts in ports if len(bursts)
+            sim.simulate_batch(lp.batch, self.sim_config, self.src_system,
+                               self.dst_system, already_legal=True,
+                               beats=lp.beats if beats_ok else None)
+            for lp in ports if len(lp.batch)
         ]
         if not results:
             return sim.SimResult(0, 0, 0, self.sim_config.launch_latency, 0)

@@ -256,7 +256,8 @@ _INIT_CODE = PROTO_CODE[Protocol.INIT]
 
 def simulate_batch(batch: DescriptorBatch, cfg: EngineConfig,
                    src: MemSystem, dst: MemSystem,
-                   already_legal: bool = False) -> SimResult:
+                   already_legal: bool = False,
+                   beats: Optional[np.ndarray] = None) -> SimResult:
     """Structure-of-arrays transport-layer model — the hot path.
 
     Cycle-identical to `simulate_reference` over the equivalent object list
@@ -270,6 +271,11 @@ def simulate_batch(batch: DescriptorBatch, cfg: EngineConfig,
 
     `already_legal=True` mirrors the reference semantics exactly: every row
     is taken as one pre-legalized burst that is its own descriptor.
+
+    `beats` — optional precomputed `beats_array` for the (already legal)
+    burst stream at `cfg.bus_width` — the captured-plan replay entry point:
+    a `TransferPlan` freezes its beat counts at capture, so steady-state
+    replays skip even this array pass.
     """
     useful = batch.total_bytes
     if already_legal:
@@ -282,6 +288,7 @@ def simulate_batch(batch: DescriptorBatch, cfg: EngineConfig,
             batch = dataclasses.replace(batch, options=None)
         bursts = legalize_batch(batch, bus_width=cfg.bus_width)
         per_row_desc = False
+        beats = None                      # precomputed beats are per burst
 
     n = len(bursts)
     if n == 0:
@@ -300,7 +307,8 @@ def simulate_batch(batch: DescriptorBatch, cfg: EngineConfig,
     decoupled = cfg.decoupled
     exclusive = cfg.exclusive_transfers
 
-    beats = beats_array(bursts.src_addr, bursts.length, width)
+    if beats is None:
+        beats = beats_array(bursts.src_addr, bursts.length, width)
     total_beats = int(beats.sum())
 
     def stretched(mem: MemSystem) -> np.ndarray:
@@ -336,7 +344,10 @@ def simulate_batch(batch: DescriptorBatch, cfg: EngineConfig,
         new_desc = new_desc_arr.tolist()
     else:
         # non-exclusive engines accept one descriptor per cycle: launch
-        # times are a pure function of the descriptor rank (shifted view)
+        # times are a pure function of the descriptor rank (shifted view).
+        # The .tolist() is deliberate: indexing the ndarray directly in
+        # the recurrence loop leaks np.int64 scalars into every subsequent
+        # max/add and measures ~30% slower end-to-end (EXPERIMENTS.md §2).
         rank = np.cumsum(new_desc_arr) - 1
         launch = (rank * (config + 1) + config + latency).tolist()
         new_desc = None
@@ -479,15 +490,17 @@ class _ChannelState:
                  "last_wend", "useful", "total_beats", "rd", "wr", "width")
 
     def __init__(self, idx: int, bursts: DescriptorBatch, useful: int,
-                 cfg: EngineConfig, rd: _EndpointPort, wr: _EndpointPort
-                 ) -> None:
+                 cfg: EngineConfig, rd: _EndpointPort, wr: _EndpointPort,
+                 beats: Optional[np.ndarray] = None) -> None:
         self.idx = idx
         self.n = len(bursts)
         self.rd = rd
         self.wr = wr
         self.width = cfg.bus_width
         self.useful = useful
-        beats = beats_array(bursts.src_addr, bursts.length, cfg.bus_width)
+        if beats is None:
+            beats = beats_array(bursts.src_addr, bursts.length,
+                                cfg.bus_width)
         self.total_beats = int(beats.sum())
         self.beats = beats.tolist()
         buf = max(1, cfg.buffer_beats)
@@ -625,6 +638,7 @@ def simulate_channels(
     mems: Union[Tuple[MemSystem, MemSystem],
                 Sequence[Tuple[MemSystem, MemSystem]]],
     already_legal: bool = False,
+    beats: Optional[Sequence[Optional[np.ndarray]]] = None,
 ) -> ChannelSimResult:
     """Concurrent multi-channel transport model (event-driven).
 
@@ -642,6 +656,11 @@ def simulate_channels(
     constraints resolved at grant time (deterministic; ties break on
     channel index).  With a single channel the shared terms collapse onto
     the private ones and the run is cycle-identical to `simulate_batch`.
+
+    `beats` — optional per-channel precomputed `beats_array` columns (the
+    captured-plan replay entry point, as on `simulate_batch`); entries may
+    be ``None`` per channel and the whole argument only applies with
+    `already_legal=True`.
     """
     n_ch = len(batches)
     cfgs = ([cfg] * n_ch if isinstance(cfg, EngineConfig) else list(cfg))
@@ -666,6 +685,7 @@ def simulate_channels(
     for c in range(n_ch):
         batch = batches[c]
         useful = batch.total_bytes
+        ch_beats = beats[c] if (beats is not None and already_legal) else None
         if not already_legal:
             if batch.options is not None:
                 batch = dataclasses.replace(batch, options=None)
@@ -673,7 +693,8 @@ def simulate_channels(
         src, dst = pairs[c]
         rd = rd_ports.setdefault(id(src), _EndpointPort(src))
         wr = wr_ports.setdefault(id(dst), _EndpointPort(dst))
-        channels.append(_ChannelState(c, batch, useful, cfgs[c], rd, wr))
+        channels.append(_ChannelState(c, batch, useful, cfgs[c], rd, wr,
+                                      beats=ch_beats))
 
     heap = [(ch.lower_bound(), ch.idx) for ch in channels if ch.n]
     heapq.heapify(heap)

@@ -27,15 +27,17 @@ paged-via-DMA == contiguous.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DescriptorBatch, IDMAEngine, MemoryMap, Protocol,
-                        execute_batch, legalize_batch)
+from repro.core import (DescriptorBatch, IDMAEngine, MemoryMap, PlanCache,
+                        Protocol, concat_batches, execute_batch,
+                        legalize_batch)
 
 
 @dataclass
@@ -141,6 +143,36 @@ class KVLayout:
         return self.n_pages * self.page_bytes
 
 
+def gather_bases(layout: KVLayout, page_table: np.ndarray, max_len: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-(sequence, page) byte offsets of a page gather: source offsets
+    within one pool, destination offsets within one contiguous region.
+
+    The single source of truth for the gather address math — shared by
+    `gather_descriptors` and `PagedKVDMA`'s template-replay fast path, so
+    the two can never diverge."""
+    n = max_len // layout.page_size
+    tables = np.asarray(page_table)[:, :n].astype(np.int64)   # (B, n)
+    src = tables.reshape(-1) * layout.page_bytes
+    dst = np.arange(tables.size, dtype=np.int64) * layout.page_bytes
+    return src, dst
+
+
+def append_bases(layout: KVLayout, page_table: np.ndarray, pos: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-sequence byte offsets of a token append: source offsets within
+    the staging buffer, destination offsets within one pool.
+
+    The single source of truth for the append address math — shared by
+    `append_descriptors` and `PagedKVDMA`'s template-replay fast path."""
+    tables = np.asarray(page_table).astype(np.int64)
+    phys = tables[:, pos // layout.page_size]                 # (B,)
+    dst = (phys * layout.page_bytes
+           + (pos % layout.page_size) * layout.row_bytes)
+    src = np.arange(phys.shape[0], dtype=np.int64) * layout.row_bytes
+    return src, dst
+
+
 def gather_descriptors(layout: KVLayout, page_table: np.ndarray,
                        max_len: int, pool_base: int = 0, dst_base: int = 0,
                        src_protocol: Protocol = Protocol.HBM,
@@ -153,14 +185,10 @@ def gather_descriptors(layout: KVLayout, page_table: np.ndarray,
     order, so the destination range ``[dst_base + b*L*row_bytes, ...)`` is
     sequence b's first `max_len` token rows, contiguous.
     """
-    n = max_len // layout.page_size
-    tables = np.asarray(page_table)[:, :n].astype(np.int64)   # (B, n)
-    B = tables.shape[0]
-    src = pool_base + tables.reshape(-1) * layout.page_bytes
-    dst = dst_base + np.arange(B * n, dtype=np.int64) * layout.page_bytes
+    src, dst = gather_bases(layout, page_table, max_len)
     return DescriptorBatch.from_arrays(
-        src_addr=src, dst_addr=dst,
-        length=np.full(B * n, layout.page_bytes, dtype=np.int64),
+        src_addr=pool_base + src, dst_addr=dst_base + dst,
+        length=np.full(src.shape[0], layout.page_bytes, dtype=np.int64),
         src_protocol=src_protocol, dst_protocol=dst_protocol)
 
 
@@ -172,17 +200,10 @@ def append_descriptors(layout: KVLayout, page_table: np.ndarray, pos: int,
     """Token-append as a `DescriptorBatch`: scatter one row-sized transfer
     per sequence from a contiguous staging buffer (row b at
     ``src_base + b*row_bytes``) into each sequence's current page slot."""
-    tables = np.asarray(page_table).astype(np.int64)
-    page_idx = pos // layout.page_size
-    offset = pos % layout.page_size
-    phys = tables[:, page_idx]                                # (B,)
-    B = phys.shape[0]
-    src = src_base + np.arange(B, dtype=np.int64) * layout.row_bytes
-    dst = (pool_base + phys * layout.page_bytes
-           + offset * layout.row_bytes)
+    src, dst = append_bases(layout, page_table, pos)
     return DescriptorBatch.from_arrays(
-        src_addr=src, dst_addr=dst,
-        length=np.full(B, layout.row_bytes, dtype=np.int64),
+        src_addr=src_base + src, dst_addr=pool_base + dst,
+        length=np.full(src.shape[0], layout.row_bytes, dtype=np.int64),
         src_protocol=src_protocol, dst_protocol=dst_protocol)
 
 
@@ -203,13 +224,43 @@ class PagedKVDMA:
     serving-throughput configuration: same bytes, no per-decode-step
     timing simulation.  Engine byte/descriptor stats are still updated;
     transfer ids are not assigned on this path.
+
+    Steady-state decode is compile-once / replay-many: each append/gather
+    stream's structure is a pure function of the `KVLayout` and the
+    (batch, page-count) shape, so the cache captures per-layout
+    `TransferPlan` templates (`core.plan`) on first use and every later
+    step is a vectorized page-table address rebind — no legalizer or
+    mid-end code runs.  ``plan_cache=True`` (default) builds a private
+    `PlanCache` (also handed to an internally created engine);
+    pass a `PlanCache` to share one, or ``False`` to disable.  A
+    caller-supplied engine keeps whatever ``plan_cache`` it was built
+    with — engine-level planning stays opt-in.
     """
 
     def __init__(self, layout: KVLayout, max_batch: int, max_len: int,
                  engine: Optional[IDMAEngine] = None,
-                 num_channels: int = 1, timing: bool = True) -> None:
+                 num_channels: int = 1, timing: bool = True,
+                 plan_cache: Union[bool, PlanCache] = True) -> None:
         self.layout = layout
         self.timing = timing
+        if plan_cache is True:
+            plan_cache = PlanCache(capacity=128)
+        elif plan_cache is False:
+            plan_cache = None
+        self.plan_cache: Optional[PlanCache] = plan_cache
+        # per-KVLayout plan templates: (site, n_rows) → TransferPlan.  The
+        # append/gather builders emit streams whose structural signature
+        # is a pure function of the layout and the row count, so the
+        # functional path can skip even the signature hash once a site's
+        # template exists (sound only when the layout's transfer granules
+        # are bus-width multiples — checked before use).  LRU-bounded so
+        # a growing-context loop (a new gather shape per page count)
+        # cannot pin an unbounded set of plans past the PlanCache's own
+        # eviction.
+        self._templates: "OrderedDict[Tuple[str, int], object]" = \
+            OrderedDict()
+        self._template_capacity = 32
+        self._template_modulus: Optional[int] = None
         self.max_batch = max_batch
         self.max_len = max_len
         gather_bytes = max_batch * max_len * layout.row_bytes
@@ -224,7 +275,8 @@ class PagedKVDMA:
             Protocol.VMEM: 2 * gather_bytes + 2 * stage_bytes,
         })
         if engine is None:
-            engine = IDMAEngine(mem=mem, num_channels=num_channels)
+            engine = IDMAEngine(mem=mem, num_channels=num_channels,
+                                plan_cache=self.plan_cache)
         elif engine.mem is None:
             raise ValueError("PagedKVDMA needs an engine with a MemoryMap")
         else:
@@ -255,19 +307,84 @@ class PagedKVDMA:
 
     # -- the decode-step traffic -------------------------------------------
 
-    def _move(self, desc: DescriptorBatch) -> List[int]:
+    def _move(self, desc: DescriptorBatch,
+              site: Optional[str] = None) -> List[int]:
         """Route one descriptor stream: through the engine's channel
         queues when `timing`, else straight through the vectorized
-        functional data plane (`execute_batch`)."""
+        functional data plane (`execute_batch`).
+
+        On the functional path a configured plan cache replaces the
+        per-call `legalize_batch` with a captured-plan rebind.  `site`
+        names the builder ("append"/"gather") whose output structure is a
+        pure function of (layout, row count): the captured plan is also
+        stored as that site's template, which lets `append`/`gather`
+        bypass descriptor building *and* the signature hash on later
+        steps (`_replay_move`)."""
         if self.timing:
             return self.engine.dispatch_batch(desc)
         eng = self.engine
-        legal = legalize_batch(desc, bus_width=eng.bus_width)
+        if self.plan_cache is not None:
+            plan, _ = self.plan_cache.plan_for(desc,
+                                               bus_width=eng.bus_width)
+            if site is not None and self._template_modulus is not None \
+                    and self.layout.row_bytes % self._template_modulus == 0:
+                self._templates[(site, len(desc))] = plan
+                if len(self._templates) > self._template_capacity:
+                    self._templates.popitem(last=False)
+            legal = plan.rebind(desc.src_addr, desc.dst_addr,
+                                transfer_id=desc.transfer_id)
+            hints = plan.hints
+        else:
+            legal = legalize_batch(desc, bus_width=eng.bus_width)
+            hints = None
         moved = execute_batch(legal, eng.mem, bus_width=eng.bus_width,
-                              check=False)
+                              check=False, hints=hints)
         eng.stats.submitted += len(desc)
         eng.stats.completed += len(desc)
         eng.stats.bursts += len(legal)
+        eng.stats.bytes_moved += moved
+        return []
+
+    def _template(self, site: str, n_rows: int):
+        """The captured per-`KVLayout` plan template for a builder site,
+        or None (first call, timing engine, or planning disabled).
+
+        Skipping the plan-cache signature is only sound when every base
+        the builders emit keeps the captured address residues, i.e. when
+        `row_bytes` (the granule every base is a multiple of) is itself
+        a multiple of `structure_modulus` for the protocols this cache
+        drives — for HBM↔VMEM that is the bus width, but the check is
+        computed from the protocol rules so a paged/pow2 protocol pair
+        would correctly disable the shortcut rather than silently replay
+        a stale cut structure."""
+        if self.timing or self.plan_cache is None:
+            return None
+        if self._template_modulus is None:
+            from repro.core import structure_modulus
+            from repro.core.descriptor import PROTO_CODE
+            codes = np.asarray([PROTO_CODE[Protocol.HBM],
+                                PROTO_CODE[Protocol.VMEM]], dtype=np.uint8)
+            self._template_modulus = structure_modulus(
+                codes, codes, self.engine.bus_width)
+        if self.layout.row_bytes % self._template_modulus != 0:
+            return None
+        plan = self._templates.get((site, n_rows))
+        if plan is not None:
+            self._templates.move_to_end((site, n_rows))
+        return plan
+
+    def _replay_move(self, plan, src_base: np.ndarray,
+                     dst_base: np.ndarray) -> List[int]:
+        """Steady-state submission: replay the site template onto this
+        step's page-table bases (`TransferPlan.replay_execute`).  No
+        descriptor objects, no signature hash, no legalizer — bounds
+        revalidation is the plan's vectorized pre-write check."""
+        eng = self.engine
+        self.plan_cache.stats.hits += 1        # transparent template hit
+        moved = plan.replay_execute(src_base, dst_base, eng.mem)
+        eng.stats.submitted += plan.n_desc
+        eng.stats.completed += plan.n_desc
+        eng.stats.bursts += plan.n_bursts
         eng.stats.bytes_moved += moved
         return []
 
@@ -286,11 +403,23 @@ class PagedKVDMA:
         vb = np.ascontiguousarray(v).view(np.uint8).reshape(-1)
         vmem[self._sk:self._sk + kb.size] = kb
         vmem[self._sv:self._sv + vb.size] = vb
-        ids = self._move(append_descriptors(
-            lay, page_table, pos, src_base=self._sk, pool_base=0))
-        ids += self._move(append_descriptors(
-            lay, page_table, pos, src_base=self._sv,
-            pool_base=lay.pool_bytes))
+        plan = self._template("append", 2 * B)
+        if plan is not None:
+            # steady state: compute this step's bases straight from the
+            # page table (same math as append_descriptors, via
+            # append_bases) and replay the captured template
+            stage, slot = append_bases(lay, page_table, pos)
+            return self._replay_move(
+                plan,
+                np.concatenate([self._sk + stage, self._sv + stage]),
+                np.concatenate([slot, lay.pool_bytes + slot]))
+        # K and V scatters ride one DescriptorBatch: a single doorbell
+        # (and a single plan signature) per decode step, not two
+        ids = self._move(concat_batches([
+            append_descriptors(lay, page_table, pos, src_base=self._sk,
+                               pool_base=0),
+            append_descriptors(lay, page_table, pos, src_base=self._sv,
+                               pool_base=lay.pool_bytes)]), site="append")
         if self.timing:
             self.engine.wait_all()
         return ids
@@ -309,11 +438,23 @@ class PagedKVDMA:
             raise ValueError(
                 f"gather ({B}, {L}) exceeds the ({self.max_batch}, "
                 f"{self.max_len}) VMEM region this cache was sized for")
-        self._move(gather_descriptors(
-            lay, page_table, max_len, pool_base=0, dst_base=self._gk))
-        self._move(gather_descriptors(
-            lay, page_table, max_len, pool_base=lay.pool_bytes,
-            dst_base=self._gv))
+        n = L // lay.page_size
+        plan = self._template("gather", 2 * B * n)
+        if plan is not None:
+            # same math as gather_descriptors, via gather_bases
+            flat, walk = gather_bases(lay, page_table, max_len)
+            self._replay_move(
+                plan,
+                np.concatenate([flat, lay.pool_bytes + flat]),
+                np.concatenate([self._gk + walk, self._gv + walk]))
+        else:
+            # one doorbell per step: K and V page walks in one batch
+            self._move(concat_batches([
+                gather_descriptors(lay, page_table, max_len, pool_base=0,
+                                   dst_base=self._gk),
+                gather_descriptors(lay, page_table, max_len,
+                                   pool_base=lay.pool_bytes,
+                                   dst_base=self._gv)]), site="gather")
         if self.timing:
             self.engine.wait_all()
 

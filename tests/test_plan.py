@@ -1,0 +1,390 @@
+"""Captured transfer plans: replay must be byte- and cycle-identical.
+
+The compile-once / replay-many contract of `core.plan`:
+
+* `TransferPlan.rebind` over a structurally identical submission produces
+  exactly the burst stream `legalize_batch` would — column-for-column —
+  so `execute_batch` moves identical bytes and `simulate_batch` /
+  `simulate_channels` count identical cycles;
+* `PlanCache` signatures separate everything that shapes legalization
+  (shapes, strides, lengths, protocols, options, address residues) while
+  excluding the addresses themselves, so paged-KV-style base rebinds hit
+  and structural look-alikes (same shapes, different strides) miss;
+* the engine drain loop's progress guard turns an inconsistent error
+  handler into a `RuntimeError` instead of an infinite spin.
+"""
+
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (BackendOptions, DescriptorBatch, EngineConfig,
+                        ErrorPolicy, IDMAEngine, InitPattern, MemoryMap,
+                        NdTransfer, PlanCache, Protocol, TensorDim,
+                        Transfer1D, TransferError, capture_plan,
+                        execute_batch, legalize_batch, nd_plan_signature,
+                        plan_signature, simulate_batch, simulate_channels,
+                        simulate_plan, structure_modulus)
+from repro.core.simulator import SRAM, HBM as HBM_MEM, beats_array
+
+COLUMNS = ("src_addr", "dst_addr", "length", "src_proto", "dst_proto",
+           "owner", "transfer_id", "max_burst", "reduce_len")
+
+PAIRS = [
+    (Protocol.HBM, Protocol.VMEM),       # TPU serving pair (pageless)
+    (Protocol.AXI4, Protocol.AXI4),      # 4 KiB page rule both ports
+    (Protocol.AXI_LITE, Protocol.AXI4),  # beat-sized bursts one side
+    (Protocol.TILELINK, Protocol.TILELINK),   # pow2 aligned walk
+    (Protocol.INIT, Protocol.VMEM),      # generator source
+]
+
+
+def random_batch(rng, n, pair, slot=8192, max_len=5000,
+                 options=None):
+    src, dst = pair
+    return DescriptorBatch.from_arrays(
+        src_addr=rng.permutation(4 * n)[:n].astype(np.int64) * slot,
+        dst_addr=rng.permutation(4 * n)[:n].astype(np.int64) * slot,
+        length=rng.integers(1, max_len, n).astype(np.int64),
+        src_protocol=src, dst_protocol=dst, options=options)
+
+
+def rebased(batch, rng, modulus):
+    """A structurally identical batch with per-row addresses shifted by
+    random multiples of the signature modulus."""
+    return dataclasses.replace(
+        batch,
+        src_addr=batch.src_addr + rng.integers(0, 64, len(batch)) * modulus,
+        dst_addr=batch.dst_addr + rng.integers(0, 64, len(batch)) * modulus)
+
+
+def assert_same_stream(got, want):
+    for col in COLUMNS:
+        assert np.array_equal(getattr(got, col), getattr(want, col)), col
+
+
+class TestCaptureReplayIdentity:
+    @pytest.mark.parametrize("pair", PAIRS, ids=lambda p: p[0].value)
+    def test_rebind_matches_legalize_batch(self, pair):
+        rng = np.random.default_rng(7)
+        opts = (BackendOptions(init_pattern=InitPattern.PSEUDORANDOM,
+                               init_value=11)
+                if pair[0] == Protocol.INIT else None)
+        batch = random_batch(rng, 128, pair, options=opts)
+        plan = capture_plan(batch, bus_width=8)
+        replay = plan.rebind(batch.src_addr, batch.dst_addr,
+                             transfer_id=batch.transfer_id)
+        assert_same_stream(replay, legalize_batch(batch, bus_width=8))
+        assert np.array_equal(
+            plan.beats, beats_array(replay.src_addr, replay.length, 8))
+
+    @pytest.mark.parametrize("pair", PAIRS, ids=lambda p: p[0].value)
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_rebound_addresses_byte_and_cycle_identical(self, pair, seed):
+        """Replay under rebound base addresses == lowering from scratch:
+        the same burst columns, the same bytes through `execute_batch`,
+        the same cycles through `simulate_batch`."""
+        rng = np.random.default_rng(seed)
+        opts = (BackendOptions(init_pattern=InitPattern.INCREMENTING,
+                               init_value=3)
+                if pair[0] == Protocol.INIT else None)
+        batch = random_batch(rng, 64, pair, options=opts)
+        plan = capture_plan(batch, bus_width=8)
+        m = structure_modulus(batch.src_proto, batch.dst_proto, 8)
+        batch2 = rebased(batch, rng, m)
+        assert plan_signature(batch2, 8) == plan_signature(batch, 8)
+
+        replay = plan.rebind(batch2.src_addr, batch2.dst_addr,
+                             transfer_id=batch2.transfer_id)
+        ref = legalize_batch(batch2, bus_width=8)
+        assert_same_stream(replay, ref)
+
+        size = int(max(batch2.src_addr.max() + 5000,
+                       batch2.dst_addr.max() + 5000))
+        spaces = {p: size for p in set(pair) - {Protocol.INIT}}
+        mem_a, mem_b = MemoryMap.create(spaces), MemoryMap.create(spaces)
+        fill = rng.integers(0, 256, size, dtype=np.uint8)
+        for mm in (mem_a, mem_b):
+            for p in mm.spaces:
+                mm.spaces[p][:] = fill
+        execute_batch(ref, mem_a, bus_width=8)
+        execute_batch(replay, mem_b, bus_width=8, check=False,
+                      hints=plan.hints)
+        for p in mem_a.spaces:
+            assert np.array_equal(mem_a.spaces[p], mem_b.spaces[p])
+
+        cfg = EngineConfig(bus_width=8, n_outstanding=4)
+        want = simulate_batch(batch2, cfg, SRAM, SRAM)
+        got = simulate_plan(plan, batch2.src_addr, batch2.dst_addr,
+                            cfg, SRAM, SRAM,
+                            transfer_id=batch2.transfer_id)
+        assert (got.cycles, got.bus_beats, got.n_bursts,
+                got.first_read_req) == \
+            (want.cycles, want.bus_beats, want.n_bursts,
+             want.first_read_req)
+
+    @pytest.mark.parametrize(
+        "seed,pair_i,slot",
+        list(itertools.product(range(6), range(len(PAIRS)),
+                               [512, 4096, 8192])))
+    def test_property_replay_equals_fresh_lowering(self, seed, pair_i,
+                                                   slot):
+        rng = np.random.default_rng((seed, pair_i, slot))
+        pair = PAIRS[pair_i]
+        n = int(rng.integers(1, 80))
+        batch = random_batch(rng, n, pair, slot=slot,
+                             max_len=min(slot, 4096))
+        plan = capture_plan(batch, bus_width=8)
+        m = structure_modulus(batch.src_proto, batch.dst_proto, 8)
+        batch2 = rebased(batch, rng, m)
+        replay = plan.rebind(batch2.src_addr, batch2.dst_addr,
+                             transfer_id=batch2.transfer_id)
+        assert_same_stream(replay, legalize_batch(batch2, bus_width=8))
+
+
+class TestPlanCacheSignatures:
+    def test_base_rebind_hits_pageless(self):
+        """HBM→VMEM (no page rule): arbitrary bus-aligned rebinds replay
+        one captured plan — the paged-KV steady state."""
+        rng = np.random.default_rng(3)
+        pc = PlanCache()
+        batch = random_batch(rng, 32, (Protocol.HBM, Protocol.VMEM))
+        pc.replay_batch(batch)
+        for _ in range(5):
+            batch = rebased(batch, rng, 8)
+            legal, plan = pc.replay_batch(batch)
+            assert_same_stream(legal, legalize_batch(batch, bus_width=8))
+        assert pc.stats.misses == 1 and pc.stats.hits == 5
+        assert len(pc) == 1
+
+    def test_page_residue_distinguishes_axi4(self):
+        """AXI4: a page-aligned rebase hits; a rebase that changes the
+        intra-page offset (different cut structure) misses — and both
+        replay correctly."""
+        rng = np.random.default_rng(4)
+        pc = PlanCache()
+        batch = random_batch(rng, 16, (Protocol.AXI4, Protocol.AXI4))
+        pc.replay_batch(batch)
+        aligned = dataclasses.replace(batch,
+                                      src_addr=batch.src_addr + 3 * 4096,
+                                      dst_addr=batch.dst_addr + 7 * 4096)
+        legal, _ = pc.replay_batch(aligned)
+        assert_same_stream(legal, legalize_batch(aligned, bus_width=8))
+        assert pc.stats.hits == 1
+        shifted = dataclasses.replace(batch, src_addr=batch.src_addr + 64)
+        legal, _ = pc.replay_batch(shifted)
+        assert_same_stream(legal, legalize_batch(shifted, bus_width=8))
+        assert pc.stats.misses == 2
+
+    def test_same_shape_different_strides_misses(self):
+        """The signature-collision candidate: two N-D transfers with the
+        same reps/shape but different strides must not share a plan."""
+        kw = dict(src_addr=0, dst_addr=0, inner_length=64,
+                  src_protocol=Protocol.HBM, dst_protocol=Protocol.VMEM)
+        a = NdTransfer(dims=(TensorDim(256, 256, 8),), **kw)
+        b = NdTransfer(dims=(TensorDim(512, 256, 8),), **kw)
+        assert nd_plan_signature(a, 8) != nd_plan_signature(b, 8)
+        pc = PlanCache()
+        la, _ = pc.replay_nd(a)
+        lb, _ = pc.replay_nd(b)
+        assert pc.stats.misses == 2 and pc.stats.hits == 0
+        from repro.core import tensor_nd_batch
+        assert_same_stream(la, legalize_batch(tensor_nd_batch(a),
+                                              bus_width=8))
+        assert_same_stream(lb, legalize_batch(tensor_nd_batch(b),
+                                              bus_width=8))
+        # identical strides DO share one template across rebased bases
+        c = dataclasses.replace(a, src_addr=8 * 997, dst_addr=8 * 131)
+        lc, _ = pc.replay_nd(c)
+        assert pc.stats.hits == 1
+        assert_same_stream(lc, legalize_batch(tensor_nd_batch(c),
+                                              bus_width=8))
+
+    def test_init_value_is_part_of_the_signature(self):
+        """Two Init fills differing only in options must not share a plan
+        (the frozen options column carries the pattern seed)."""
+        def fill(value):
+            return DescriptorBatch.from_arrays(
+                src_addr=np.arange(4, dtype=np.int64) * 64,
+                dst_addr=np.arange(4, dtype=np.int64) * 64,
+                length=np.full(4, 64, dtype=np.int64),
+                src_protocol=Protocol.INIT, dst_protocol=Protocol.VMEM,
+                options=BackendOptions(
+                    init_pattern=InitPattern.PSEUDORANDOM,
+                    init_value=value))
+        pc = PlanCache()
+        pc.replay_batch(fill(1))
+        pc.replay_batch(fill(2))
+        assert pc.stats.misses == 2
+
+    def test_lru_eviction(self):
+        rng = np.random.default_rng(5)
+        pc = PlanCache(capacity=2)
+        batches = [random_batch(rng, 8 + i, (Protocol.HBM, Protocol.VMEM))
+                   for i in range(3)]
+        for b in batches:
+            pc.replay_batch(b)
+        assert len(pc) == 2 and pc.stats.evictions == 1
+        pc.replay_batch(batches[0])           # evicted -> recapture
+        assert pc.stats.misses == 4 and pc.stats.hits == 0
+
+
+def _paired_engines(rng, num_channels=1, plan_cache=None, **kw):
+    size = 1 << 20
+    fill = rng.integers(0, 256, size, dtype=np.uint8)
+    engines = []
+    for pc in (None, plan_cache or PlanCache()):
+        mem = MemoryMap.create({Protocol.HBM: size, Protocol.VMEM: size})
+        mem.spaces[Protocol.HBM][:] = fill
+        engines.append(IDMAEngine(mem=mem, num_channels=num_channels,
+                                  plan_cache=pc, **kw))
+    return engines
+
+
+class TestEngineReplayEquivalence:
+    @pytest.mark.parametrize("num_channels", [1, 3])
+    def test_dispatch_loop_bytes_and_cycles(self, num_channels):
+        """A steady-state dispatch loop through a planned engine matches
+        the uncached engine byte-for-byte and cycle-for-cycle, including
+        the multi-channel timing fabric (`simulate_channels`)."""
+        rng = np.random.default_rng(11)
+        plain, planned = _paired_engines(rng, num_channels=num_channels)
+        for step in range(5):
+            n = 24
+            src = rng.permutation(128)[:n].astype(np.int64) * 8192
+            dst = rng.permutation(128)[:n].astype(np.int64) * 8192
+            results = []
+            for eng in (plain, planned):
+                b = DescriptorBatch.from_arrays(
+                    src_addr=src, dst_addr=dst,
+                    length=np.full(n, 2048, dtype=np.int64),
+                    src_protocol=Protocol.HBM, dst_protocol=Protocol.VMEM)
+                eng.dispatch_batch(b)
+                results.append(eng.wait_all())
+            r_plain, r_planned = results
+            assert r_plain.aggregate.cycles == r_planned.aggregate.cycles
+            assert [c.cycles for c in r_plain.per_channel] == \
+                [c.cycles for c in r_planned.per_channel]
+        assert np.array_equal(plain.mem.spaces[Protocol.VMEM],
+                              planned.mem.spaces[Protocol.VMEM])
+        assert plain.stats == planned.stats
+        assert planned.plan_cache.stats.hits > 0
+
+    def test_mixed_nd_and_batch_submissions(self):
+        rng = np.random.default_rng(13)
+        plain, planned = _paired_engines(rng, num_channels=2)
+        for step in range(4):
+            base = int(rng.integers(0, 64)) * 8192
+            for eng in (plain, planned):
+                eng.submit_async(NdTransfer(
+                    src_addr=base, dst_addr=base + 4096, inner_length=128,
+                    dims=(TensorDim(512, 512, 6),),
+                    src_protocol=Protocol.HBM,
+                    dst_protocol=Protocol.VMEM))
+                eng.submit_async(Transfer1D(
+                    src_addr=base, dst_addr=base, length=3000,
+                    src_protocol=Protocol.HBM,
+                    dst_protocol=Protocol.VMEM))
+            ra, rb = plain.wait_all(), planned.wait_all()
+            assert ra.aggregate.cycles == rb.aggregate.cycles
+        assert np.array_equal(plain.mem.spaces[Protocol.VMEM],
+                              planned.mem.spaces[Protocol.VMEM])
+        assert plain.stats == planned.stats
+
+    def test_error_replay_still_exact_under_plans(self):
+        """Fault injection + the replay verb behave identically on a
+        planned engine (hints are dropped on the truncated re-issue)."""
+        rng = np.random.default_rng(17)
+        plain, planned = _paired_engines(
+            rng, error_policy=ErrorPolicy(action="replay"))
+        b = DescriptorBatch.from_arrays(
+            src_addr=np.arange(8, dtype=np.int64) * 4096,
+            dst_addr=np.arange(8, dtype=np.int64) * 4096,
+            length=np.full(8, 2048, dtype=np.int64),
+            src_protocol=Protocol.HBM, dst_protocol=Protocol.VMEM)
+        for eng in (plain, planned):
+            eng.inject_fault(3)
+            eng.dispatch_batch(b)
+            eng.wait_all()
+        assert plain.stats == planned.stats
+        assert planned.stats.replays == 1
+        assert np.array_equal(plain.mem.spaces[Protocol.VMEM],
+                              planned.mem.spaces[Protocol.VMEM])
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_randomized_page_tables_paged_kv(self, seed):
+        """PagedKVDMA with plans on vs off over randomized page tables:
+        identical gathers and identical physical pools."""
+        from repro.serve.kvcache import KVLayout, PagedKVDMA, PagePool, \
+            make_page_tables
+        rng = np.random.default_rng(seed)
+        n_pages, page_size, hkv, dh, steps, b = 32, 4, 2, 8, 8, 3
+        lay = KVLayout(n_pages, page_size, hkv, dh, itemsize=4)
+        alloc = PagePool(n_pages, page_size)
+        rng.shuffle(alloc.free)
+        tables = make_page_tables(alloc, b, steps)
+        dmas = [PagedKVDMA(lay, max_batch=b, max_len=steps, timing=False,
+                           plan_cache=on) for on in (False, True)]
+        for pos in range(steps):
+            k = rng.standard_normal((b, hkv, dh)).astype(np.float32)
+            v = rng.standard_normal((b, hkv, dh)).astype(np.float32)
+            for dma in dmas:
+                dma.append(tables, pos, k, v)
+        (k0, v0), (k1, v1) = (d.gather(tables, steps) for d in dmas)
+        assert np.array_equal(k0, k1) and np.array_equal(v0, v1)
+        assert np.array_equal(dmas[0]._pool("k"), dmas[1]._pool("k"))
+        assert np.array_equal(dmas[0]._pool("v"), dmas[1]._pool("v"))
+        assert dmas[0].engine.stats == dmas[1].engine.stats
+        assert dmas[1].plan_cache.stats.hits > 0
+
+    def test_channel_streams_with_plan_beats_match(self):
+        """simulate_channels fed frozen plan beats == recomputed beats."""
+        rng = np.random.default_rng(19)
+        batch = random_batch(rng, 40, (Protocol.HBM, Protocol.VMEM))
+        plan = capture_plan(batch, bus_width=8)
+        legal = plan.rebind(batch.src_addr, batch.dst_addr,
+                            transfer_id=batch.transfer_id)
+        cfg = EngineConfig(bus_width=8)
+        a = simulate_channels([legal, legal], cfg, (HBM_MEM, HBM_MEM),
+                              already_legal=True)
+        b = simulate_channels([legal, legal], cfg, (HBM_MEM, HBM_MEM),
+                              already_legal=True,
+                              beats=[plan.beats, plan.beats])
+        assert a.aggregate.cycles == b.aggregate.cycles
+        assert [c.cycles for c in a.per_channel] == \
+            [c.cycles for c in b.per_channel]
+
+
+class TestDrainProgressGuard:
+    def test_stuck_error_handler_raises_runtime_error(self, monkeypatch):
+        """A malformed TransferError (negative index) under the 'continue'
+        verb used to spin forever; the guard reports the stuck state."""
+        import repro.core.engine as engine_mod
+
+        def poisoned(batch, mem, **kw):
+            raise TransferError(batch.row(0), "poisoned backend", index=-1)
+
+        monkeypatch.setattr(engine_mod, "execute_batch", poisoned)
+        mem = MemoryMap.create({Protocol.HBM: 1 << 16,
+                                Protocol.VMEM: 1 << 16})
+        eng = IDMAEngine(mem=mem,
+                         error_policy=ErrorPolicy(action="continue"))
+        with pytest.raises(RuntimeError, match="stuck"):
+            eng.submit(Transfer1D(0, 0, 4096,
+                                  src_protocol=Protocol.HBM,
+                                  dst_protocol=Protocol.VMEM))
+
+    def test_replay_cap_still_raises_transfer_error(self):
+        """The bounded-replay path keeps its TransferError contract (the
+        guard must not fire first)."""
+        mem = MemoryMap.create({Protocol.HBM: 1 << 16,
+                                Protocol.VMEM: 1 << 16})
+        eng = IDMAEngine(mem=mem, error_policy=ErrorPolicy(
+            action="replay", max_replays=2))
+        eng.inject_fault(0)
+        t = Transfer1D(0, 0, 1 << 17, src_protocol=Protocol.HBM,
+                       dst_protocol=Protocol.VMEM)   # out of bounds too
+        with pytest.raises(TransferError):
+            eng.submit(t)
