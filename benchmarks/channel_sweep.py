@@ -62,7 +62,7 @@ def sweep_system(mem: MemSystem, cfg: EngineConfig,
     return out
 
 
-def run(csv_rows):
+def run(csv_rows, engine=None):
     cfg = EngineConfig(bus_width=4, n_outstanding=2)
     sweeps = {}
     for mem in SYSTEMS:
@@ -71,6 +71,25 @@ def run(csv_rows):
         for n, v in bw.items():
             csv_rows.append((f"chan_{mem.name}_{n}ch_bw", v, "bytes/cycle"))
         csv_rows.append((f"chan_{mem.name}_4ch_speedup", bw[4] / bw[1], ""))
+
+    if engine is not None:
+        # --engine <preset>: re-run the sweep on the preset's bundled
+        # timing models — its EngineConfig against its own (src, dst)
+        # endpoint pair (channels share both, as in the main sweep)
+        from repro.core.spec import preset
+        spec = preset(engine)
+        pcfg = spec.effective_sim_config
+        # dedupe: src == dst presets (e.g. cheshire) sweep once
+        for mem in dict.fromkeys((spec.src_system, spec.dst_system)):
+            bw = sweep_system(mem, pcfg)
+            label = f"{spec.name}_{mem.name}"
+            sweeps[label] = bw
+            for n, v in bw.items():
+                csv_rows.append((f"chan_{label}_{n}ch_bw", v,
+                                 "bytes/cycle"))
+            csv_rows.append((f"chan_{label}_4ch_speedup",
+                             bw[4] / bw[1], ""))
+        LAST["engine_preset"] = spec.name
 
     hbm_x4 = sweeps["HBM"][4] / sweeps["HBM"][1]
     tight_x4 = sweeps["HBM-tight"][4] / sweeps["HBM-tight"][1]

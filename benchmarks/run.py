@@ -5,6 +5,12 @@ Prints ``name,value,derived`` CSV.  `python -m benchmarks.run [--only X]`.
 Suites are imported lazily so `--only` works even when a heavyweight or
 optional dependency of an unrelated suite (jax, repro.dist) is missing.
 
+``--engine <preset>`` sweeps a named `EngineSpec` preset
+(`repro.core.spec.PRESETS`: pulp_cluster / manticore / cheshire /
+edge_ai) through every suite whose ``run`` accepts an ``engine`` kwarg —
+the suite re-runs its measurement on the preset's bundled timing models
+(`channel_sweep` is the first adopter).
+
 `--json [PATH]` additionally writes the descriptor-plane perf headline
 (object-vs-batch speedup, sweep wall clocks) plus per-suite wall-clock
 timings to PATH (default ``BENCH_descriptor_plane.json``), and — unless
@@ -20,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import os
 import re
@@ -89,7 +96,16 @@ def main() -> None:
                     help="pin the BENCH_<n>.json snapshot index")
     ap.add_argument("--no-snapshot", action="store_true",
                     help="skip the numbered BENCH_<n>.json snapshot")
+    ap.add_argument("--engine", default=None, metavar="PRESET",
+                    help="sweep a named EngineSpec preset (repro.core.spec"
+                         ".PRESETS) in the suites that support it")
     args = ap.parse_args()
+
+    if args.engine is not None:
+        from repro.core.spec import PRESETS
+        if args.engine not in PRESETS:
+            ap.error(f"unknown --engine preset {args.engine!r}: expected "
+                     f"one of {sorted(PRESETS)}")
 
     rows = []
     wall = {}
@@ -101,7 +117,12 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = importlib.import_module(_MODULES[name])
-            mod.run(rows)
+            # suites opt into preset sweeps by taking an `engine` kwarg
+            if args.engine is not None and \
+                    "engine" in inspect.signature(mod.run).parameters:
+                mod.run(rows, engine=args.engine)
+            else:
+                mod.run(rows)
             wall[name] = time.perf_counter() - t0
         except Exception as err:
             # a broken/optional-dependency suite must not discard the

@@ -18,7 +18,8 @@ from .midend import (coalesce_nd, iter_tensor_nd, mp_dist, mp_dist_batch,
                      mp_dist_tree, mp_split, mp_split_batch, rt_schedule,
                      split_and_distribute, tensor_2d, tensor_nd,
                      tensor_nd_batch)
-from .frontend import (DescFrontend, InstFrontend, RegFrontend, write_chain)
+from .frontend import (FRONTENDS, DescFrontend, InstFrontend, RegFrontend,
+                       make_frontend, write_chain)
 from .backend import (ExecHints, MemoryMap, TransferError, build_exec_hints,
                       execute, execute_batch, init_stream, splitmix32,
                       splitmix64)
@@ -35,6 +36,11 @@ from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, ChannelSimResult,
                         simulate_batch, simulate_channels,
                         simulate_reference, utilization_sweep,
                         xilinx_baseline_config)
+from .spec import (PRESETS, VMEM_ENDPOINT, BackendSpec, ChannelSpec,
+                   CustomStage, EngineSpec, FrontendSpec, MidendStage,
+                   MpDistStage, MpSplitStage, RtReplicateStage,
+                   build_engine, build_frontend, cheshire, edge_ai,
+                   manticore, preset, pulp_cluster, spec_of)
 from . import analytics, instream
 
 __all__ = [
@@ -47,7 +53,8 @@ __all__ = [
     "coalesce_nd", "iter_tensor_nd", "mp_dist", "mp_dist_batch",
     "mp_dist_tree", "mp_split", "mp_split_batch", "rt_schedule",
     "split_and_distribute", "tensor_2d", "tensor_nd", "tensor_nd_batch",
-    "DescFrontend", "InstFrontend", "RegFrontend", "write_chain",
+    "DescFrontend", "FRONTENDS", "InstFrontend", "RegFrontend",
+    "make_frontend", "write_chain",
     "ExecHints", "MemoryMap", "TransferError", "build_exec_hints",
     "execute", "execute_batch", "init_stream", "splitmix32", "splitmix64",
     "PlanCache", "PlanCacheStats", "TransferPlan", "capture_nd_plan",
@@ -61,5 +68,10 @@ __all__ = [
     "make_fragmented_batch", "manticore_idma_config", "pulp_idma_config",
     "simulate", "simulate_batch", "simulate_channels",
     "simulate_reference", "utilization_sweep", "xilinx_baseline_config",
+    "BackendSpec", "ChannelSpec", "CustomStage", "EngineSpec",
+    "FrontendSpec", "MidendStage", "MpDistStage", "MpSplitStage",
+    "PRESETS", "RtReplicateStage", "VMEM_ENDPOINT", "build_engine",
+    "build_frontend", "cheshire", "edge_ai", "manticore", "preset",
+    "pulp_cluster", "spec_of",
     "analytics", "instream",
 ]

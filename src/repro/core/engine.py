@@ -1,7 +1,11 @@
 """IDMAEngine — compose front-end(s), mid-end chain, back-end(s) (Fig. 1).
 
-The engine owns:
-  * a mid-end chain (callables rewriting descriptor lists),
+Engines are preferably *built from specs* (`core.spec.EngineSpec` via
+``build_engine``, or a named preset like ``pulp_cluster()``); the kwarg
+constructor here is the legacy shim.  The engine owns:
+  * a mid-end chain — typed `core.spec.MidendStage` pipeline stages
+    rewriting `DescriptorBatch`es on the vectorized plane (plus the
+    deprecated object-level callables rewriting descriptor lists),
   * one or more back-end ports (address-boundary-distributed, MemPool
     style, when more than one),
   * N submission channels with an asynchronous control plane
@@ -23,6 +27,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -57,14 +62,26 @@ class LoweredPort:
 class ErrorPolicy:
     """Paper §2.3 error handler: on a failing burst the engine pauses,
     reports the legalized burst base address, and the PEs choose one of
-    continue / abort / replay."""
+    continue / abort / replay.
+
+    The verb is validated eagerly at construction — a typo must fail the
+    instantiation, not surface as undefined behaviour deep inside the
+    drain loop of the first failing transfer."""
+
+    #: the paper's three error-handler verbs (§2.3)
+    VERBS = ("continue", "abort", "replay")
 
     action: str = "replay"        # "continue" | "abort" | "replay"
     max_replays: int = 3
 
     def __post_init__(self) -> None:
-        if self.action not in ("continue", "abort", "replay"):
-            raise ValueError(f"unknown error action {self.action!r}")
+        if self.action not in self.VERBS:
+            raise ValueError(
+                f"unknown error-policy action {self.action!r}: the paper's "
+                f"§2.3 verbs are {', '.join(map(repr, self.VERBS))}")
+        if self.max_replays < 0:
+            raise ValueError(
+                f"max_replays must be >= 0, got {self.max_replays}")
 
 
 @dataclass
@@ -75,6 +92,10 @@ class EngineStats:
     bursts: int = 0
     errors: int = 0
     replays: int = 0
+    #: submissions that could not be served by a configured plan cache
+    #: (multi-back-end split, or an unsigned custom pipeline stage) —
+    #: a silently-bypassing engine now shows up in its own stats
+    plan_bypasses: int = 0
 
 
 @dataclass
@@ -97,7 +118,22 @@ class CompletionRecord:
 
 
 class IDMAEngine:
-    """A concrete iDMAE instance."""
+    """A concrete iDMAE instance.
+
+    The preferred construction path is declarative: compose an
+    `core.spec.EngineSpec` and call ``build_engine(spec)`` (or one of the
+    named presets — ``build_engine(pulp_cluster())``).  This kwarg
+    constructor is kept as a thin legacy shim; the composition it
+    describes is available as an equivalent spec via the ``spec``
+    property.
+
+    ``pipeline`` is the typed mid-end chain (`core.spec.MidendStage`
+    objects rewriting `DescriptorBatch` → `DescriptorBatch`): it stays on
+    the vectorized path and remains plan-cacheable.  ``midends`` is the
+    deprecated object-level chain (``List[Transfer1D]`` callables) — it
+    forces the object bridge and can never be plan-cached, so combining
+    it with ``plan_cache=`` is a construction error.
+    """
 
     def __init__(
         self,
@@ -114,6 +150,7 @@ class IDMAEngine:
         channel_scheme: str = "round_robin",
         channel_boundary: int = 0,
         plan_cache: Optional[PlanCache] = None,
+        pipeline: Sequence[object] = (),
     ) -> None:
         if num_backends > 1 and backend_boundary <= 0:
             raise ValueError("multi-back-end engines need backend_boundary")
@@ -121,14 +158,32 @@ class IDMAEngine:
             raise ValueError("num_channels must be >= 1")
         if channel_scheme == "address" and channel_boundary <= 0:
             raise ValueError("address channel scheme needs channel_boundary")
+        if midends and plan_cache is not None:
+            # Silently bypassing the cache on every submission is the trap
+            # this used to be; a spec pipeline is the cacheable expression
+            # of the same composition.
+            raise ValueError(
+                "plan_cache= cannot be combined with object-level midends=:"
+                " legacy List[Transfer1D] callables are not plan-cacheable"
+                " and would bypass the cache on every submission. Express"
+                " the chain as core.spec.MidendStage pipeline stages"
+                " (pipeline=/EngineSpec.midend), or drop the plan cache.")
+        if midends:
+            warnings.warn(
+                "object-level midends= callables are deprecated: they force"
+                " the per-object descriptor bridge off the vectorized path;"
+                " use core.spec.MidendStage pipeline stages instead",
+                DeprecationWarning, stacklevel=2)
         self.mem = mem
         self.midends = list(midends)
+        self.pipeline = tuple(pipeline)
         self.num_backends = num_backends
         self.backend_boundary = backend_boundary
         self.bus_width = bus_width
         self.error_policy = error_policy or ErrorPolicy()
         self.sim_config = sim_config or sim.EngineConfig(
-            bus_width=bus_width, num_midends=len(self.midends))
+            bus_width=bus_width,
+            num_midends=len(self.midends) + len(self.pipeline))
         self.src_system = src_system
         self.dst_system = dst_system
         self.num_channels = num_channels
@@ -137,9 +192,17 @@ class IDMAEngine:
         #: opt-in compile-once / replay-many submission pipeline: when set,
         #: structurally repeated submissions skip the mid-end/legalizer
         #: entirely (plan capture → address rebind; see `core.plan`).
-        #: Custom object-level mid-ends and multi-back-end splits are not
-        #: plannable — those engines bypass the cache per submission.
+        #: Spec pipelines are plannable (per-stage structural signatures);
+        #: multi-back-end splits and unsigned custom stages are not —
+        #: those engines bypass the cache per submission, counted in
+        #: ``stats.plan_bypasses``.
         self.plan_cache = plan_cache
+        self._plannable = (not self.midends and num_backends == 1 and
+                           all(getattr(st, "signature", lambda: None)()
+                               is not None for st in self.pipeline))
+        #: the `EngineSpec` this engine was built from (`build_engine`),
+        #: or a lazily derived snapshot for kwarg-built engines
+        self._spec = None
         self.stats = EngineStats()
         self._next_id = 1
         self._last_completed = 0
@@ -153,6 +216,16 @@ class IDMAEngine:
         self._rr = 0                                 # round-robin cursor
         #: timing result of the last `wait_all` drain
         self.last_channel_result: Optional[sim.ChannelSimResult] = None
+
+    @property
+    def spec(self) -> "EngineSpec":
+        """The `core.spec.EngineSpec` this engine realizes — the one it
+        was built from (`build_engine`), or an equivalent snapshot derived
+        from the legacy kwargs."""
+        if self._spec is None:
+            from .spec import spec_of
+            self._spec = spec_of(self)
+        return self._spec
 
     # -- front-end interface ------------------------------------------------
 
@@ -349,6 +422,16 @@ class IDMAEngine:
         self.wait_all()
         return ids
 
+    def run_functional(self, transfer: Union[Descriptor, DescriptorBatch]
+                       ) -> None:
+        """Execute a descriptor (or whole batch) on the *functional*
+        fabric only: full lowering (plan cache / pipeline / legalizer)
+        and byte movement, but no timing simulation, submission queues
+        or completion records.  The oracle / serving fast path (cf.
+        ``PagedKVDMA(timing=False)``); ``stats.bursts``/``bytes_moved``
+        are updated, transfer ids are not assigned."""
+        self._run(transfer)
+
     def last_completed_id(self) -> int:
         return self._last_completed
 
@@ -368,27 +451,34 @@ class IDMAEngine:
                      ) -> List[LoweredPort]:
         """The lowering pipeline, plan-cache first.
 
-        With a `plan_cache` configured (and a plannable engine: no custom
-        object-level mid-ends, single back-end), a submission whose
-        structural signature was seen before never touches the mid-end or
-        legalizer — the captured plan is rebound to this submission's
-        addresses, and the frozen beat counts / execution hints ride along
-        for the two fabrics.  Everything else takes `_lower_uncached`.
+        With a `plan_cache` configured (and a plannable engine: single
+        back-end, every pipeline stage structurally signed), a submission
+        whose structural signature was seen before never touches the
+        mid-end or legalizer — the captured plan is rebound to this
+        submission's addresses, and the frozen beat counts / execution
+        hints ride along for the two fabrics.  Spec pipelines are part of
+        the capture (and of the signature, via per-stage signatures), so
+        a custom ND → split → dist composition replays like any built-in
+        lowering.  Everything else takes `_lower_uncached`, counted in
+        ``stats.plan_bypasses``.
         """
         pc = self.plan_cache
         if pc is not None:
-            if not self.midends and self.num_backends == 1:
+            if self._plannable:
                 if isinstance(transfer, NdTransfer):
                     legal, plan = pc.replay_nd(transfer,
-                                               bus_width=self.bus_width)
+                                               bus_width=self.bus_width,
+                                               pipeline=self.pipeline)
                 else:
                     if isinstance(transfer, Transfer1D):
                         transfer = DescriptorBatch.from_transfers([transfer])
                     legal, plan = pc.replay_batch(transfer,
-                                                  bus_width=self.bus_width)
+                                                  bus_width=self.bus_width,
+                                                  pipeline=self.pipeline)
                 return [LoweredPort(legal, prechecked=True,
                                     beats=plan.beats, hints=plan.hints)]
             pc.stats.bypasses += 1
+            self.stats.plan_bypasses += 1
         return [LoweredPort(b) for b in self._lower_uncached(transfer)]
 
     def _lower_uncached(self, transfer: Union[Descriptor, DescriptorBatch]
@@ -397,8 +487,9 @@ class IDMAEngine:
         batches (no execution).
 
         The whole mid-end → mp_split → mp_dist → legalizer pipeline runs on
-        the structure-of-arrays plane; custom object-level mid-end callables
-        (if any) are bridged through the adapter converters.
+        the structure-of-arrays plane: spec pipeline stages rewrite the
+        batch directly; legacy object-level mid-end callables (if any) are
+        bridged through the adapter converters afterwards.
         """
         if isinstance(transfer, DescriptorBatch):
             batch = transfer
@@ -406,6 +497,8 @@ class IDMAEngine:
             batch = tensor_nd_batch(transfer)
         else:
             batch = DescriptorBatch.from_transfers([transfer])
+        for stage in self.pipeline:
+            batch = stage.apply(batch)
         if self.midends:
             ones = batch.to_transfers()
             for me in self.midends:

@@ -158,12 +158,18 @@ class DescFrontend:
 
     `memory` is any buffer supporting slicing (the scratchpad the cores
     write descriptors into).  `doorbell(addr)` performs the single-write
-    launch; the front-end walks the chain and submits each hop."""
+    launch; the front-end walks the chain and submits each hop.
+
+    `async_submit` — the spec-level doorbell mode (`FrontendSpec
+    (doorbell="async")`): when set, `doorbell` and `doorbell_ring`
+    default to the asynchronous control plane (enqueue on the engine's
+    channel queues; the caller drains with ``engine.wait_all()``)."""
 
     def __init__(self, engine: "IDMAEngineLike",
-                 memory: bytearray) -> None:
+                 memory: bytearray, async_submit: bool = False) -> None:
         self.engine = engine
         self.memory = memory
+        self.async_submit = async_submit
         self.fetches = 0
 
     def _walk_chain(self, addr: int):
@@ -187,6 +193,8 @@ class DescFrontend:
             addr = nxt
 
     def doorbell(self, addr: int) -> List[int]:
+        if self.async_submit:
+            return self.doorbell_async(addr)
         return [self.engine.submit(t) for t in self._walk_chain(addr)]
 
     def doorbell_async(self, addr: int) -> List[int]:
@@ -199,15 +207,18 @@ class DescFrontend:
         return [self.engine.submit_async(t) for t in self._walk_chain(addr)]
 
     def doorbell_ring(self, base: int, count: int,
-                      async_submit: bool = False) -> List[int]:
+                      async_submit: Optional[bool] = None) -> List[int]:
         """Batched doorbell: decode `count` contiguous descriptors at
         `base` into a `DescriptorBatch` in one `frombuffer` and submit them
         as a batch — the XDMA-style alternative to walking a chain one
         manager-port fetch at a time (next-pointers are ignored; the ring
         layout IS the chain).
 
-        With `async_submit` the batch is sharded across the engine's
-        channel queues (`dispatch_batch`) instead of executing inline."""
+        With `async_submit` (default: the front-end's spec-level doorbell
+        mode) the batch is sharded across the engine's channel queues
+        (`dispatch_batch`) instead of executing inline."""
+        if async_submit is None:
+            async_submit = self.async_submit
         if base < 0 or count < 0:
             raise ValueError("descriptor ring base/count must be >= 0")
         if base % 8:
@@ -328,3 +339,36 @@ class IDMAEngineLike:
 
     def last_completed_id(self) -> int:  # pragma: no cover - interface
         raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Front-end registry — the spec layer's construction entry point
+# ---------------------------------------------------------------------------
+
+#: control-plane kinds (paper Table 1) → front-end classes
+FRONTENDS = {"reg": RegFrontend, "desc": DescFrontend,
+             "inst": InstFrontend}
+
+
+def make_frontend(kind: str, engine: "IDMAEngineLike", *,
+                  memory: Optional[bytearray] = None,
+                  word_bits: int = 32, ndims: int = 1,
+                  async_submit: bool = False):
+    """Instantiate a front-end by kind — the factory
+    `core.spec.FrontendSpec.build` resolves through.
+
+    ``reg``  uses `word_bits`/`ndims`; ``desc`` needs a descriptor
+    `memory` buffer and honours `async_submit` as its default doorbell
+    mode; ``inst`` takes no options."""
+    cls = FRONTENDS.get(kind)
+    if cls is None:
+        raise ValueError(f"unknown front-end kind {kind!r}: expected one "
+                         f"of {sorted(FRONTENDS)}")
+    if cls is RegFrontend:
+        return cls(engine, word_bits=word_bits, ndims=ndims)
+    if cls is DescFrontend:
+        if memory is None:
+            raise ValueError("desc front-ends need a descriptor memory "
+                             "buffer")
+        return cls(engine, memory, async_submit=async_submit)
+    return cls(engine)

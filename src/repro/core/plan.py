@@ -63,7 +63,7 @@ import dataclasses
 import math
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Hashable, Optional, Tuple
+from typing import Hashable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -113,13 +113,50 @@ def _options_key(options) -> Hashable:
     return tuple(options)
 
 
-def plan_signature(batch: DescriptorBatch, bus_width: int = 8) -> Hashable:
+def _pipeline_key(pipeline: Sequence) -> Tuple[Hashable, ...]:
+    """Per-stage structural signatures of a spec mid-end pipeline.
+
+    Raises for unsigned stages — callers (the engine's ``_plannable``
+    gate) must bypass the cache for those, never hash them."""
+    key = []
+    for st in pipeline:
+        sig = st.signature()
+        if sig is None:
+            raise ValueError(
+                f"mid-end stage {getattr(st, 'name', st)!r} has no "
+                f"structural signature — unsigned stages are not "
+                f"plan-cacheable and must bypass the cache")
+        key.append(sig)
+    return tuple(key)
+
+
+def _pipeline_modulus(pipeline: Sequence) -> int:
+    """lcm of the pipeline stages' address moduli: the span that must be
+    folded into the residue modulus so rebinding cannot change any
+    stage's cut points or routing."""
+    m = 1
+    for st in pipeline:
+        m = math.lcm(m, max(int(st.modulus()), 1))
+    return m
+
+
+def plan_signature(batch: DescriptorBatch, bus_width: int = 8,
+                   pipeline: Sequence = ()) -> Hashable:
     """Structural signature of a `DescriptorBatch` — everything that
     shapes its legalization *except* the addresses themselves, plus the
-    address residues mod `structure_modulus` (see module docstring)."""
-    m = structure_modulus(batch.src_proto, batch.dst_proto, bus_width)
+    address residues mod `structure_modulus` (see module docstring).
+
+    `pipeline` — the engine's spec mid-end stages: their per-stage
+    signatures join the key (two engines with different pipelines can
+    never share a plan) and their address moduli widen the residue
+    modulus (an ``mp_split`` at boundary B cuts as a function of
+    ``addr mod B``, so replays must preserve that residue too)."""
+    m = math.lcm(
+        structure_modulus(batch.src_proto, batch.dst_proto, bus_width),
+        _pipeline_modulus(pipeline))
     return (
         "batch", int(bus_width), m, len(batch),
+        _pipeline_key(pipeline),
         batch.length.tobytes(),
         batch.src_proto.tobytes(), batch.dst_proto.tobytes(),
         batch.owner.tobytes(),
@@ -129,17 +166,21 @@ def plan_signature(batch: DescriptorBatch, bus_width: int = 8) -> Hashable:
     )
 
 
-def nd_plan_signature(nd: NdTransfer, bus_width: int = 8) -> Hashable:
+def nd_plan_signature(nd: NdTransfer, bus_width: int = 8,
+                      pipeline: Sequence = ()) -> Hashable:
     """Structural signature of an N-D affine transfer: shapes, strides,
     inner length, protocols, options — addresses excluded up to their
     residues mod `structure_modulus`.  Two transfers with the same reps
     but different strides hash differently (their burst offset tables
-    differ), so they can never share a plan."""
+    differ), so they can never share a plan.  `pipeline` joins the key
+    exactly as in `plan_signature`."""
     src_code = np.asarray([PROTO_CODE[nd.src_protocol]], dtype=np.uint8)
     dst_code = np.asarray([PROTO_CODE[nd.dst_protocol]], dtype=np.uint8)
-    m = structure_modulus(src_code, dst_code, bus_width)
+    m = math.lcm(structure_modulus(src_code, dst_code, bus_width),
+                 _pipeline_modulus(pipeline))
     return (
         "nd", int(bus_width), m, nd.inner_length,
+        _pipeline_key(pipeline),
         tuple((d.src_stride, d.dst_stride, d.reps) for d in nd.dims),
         nd.src_protocol, nd.dst_protocol, nd.options,
         nd.src_addr % m, nd.dst_addr % m,
@@ -335,18 +376,23 @@ def _generic_replay_execute(plan: "TransferPlan", src_base, dst_base,
 
 
 def capture_plan(batch: DescriptorBatch, bus_width: int = 8,
-                 hints: bool = True) -> TransferPlan:
-    """Compile `batch` once: legalize, run the full `check_legal_batch`
-    gate, and freeze the burst stream plus its relocation table.
+                 hints: bool = True, pipeline: Sequence = ()
+                 ) -> TransferPlan:
+    """Compile `batch` once: run the spec mid-end `pipeline` (if any),
+    legalize, run the full `check_legal_batch` gate, and freeze the burst
+    stream plus its relocation table.
 
     The input rows are tracked through the pipeline by temporarily
     rewriting ``transfer_id`` to the row index — every rewrite in the
-    legalizer gathers that column untouched, so the emitted stream's
-    ``transfer_id`` IS the relocation table's ``desc_row``.
+    mid-end stages and the legalizer gathers that column untouched, so
+    the emitted stream's ``transfer_id`` IS the relocation table's
+    ``desc_row`` (offsets stay relative to the *input* batch addresses).
     """
     n = len(batch)
     shadow = dataclasses.replace(
         batch, transfer_id=np.arange(n, dtype=np.int64))
+    for stage in pipeline:
+        shadow = stage.apply(shadow)
     legal = legalize_batch(shadow, bus_width=bus_width)
     check_legal_batch(legal, bus_width=bus_width)   # once, at capture
     rows = legal.transfer_id
@@ -369,13 +415,16 @@ def capture_plan(batch: DescriptorBatch, bus_width: int = 8,
 
 
 def capture_nd_plan(nd: NdTransfer, bus_width: int = 8,
-                    hints: bool = True) -> TransferPlan:
-    """Compile an N-D affine transfer once: ``tensor_nd_batch`` →
-    ``legalize_batch``, with every burst's offsets recorded relative to
-    the transfer's single (src, dst) base pair (``n_desc == 1``) — the
-    strides are baked into the frozen offset table, which is why they are
-    part of `nd_plan_signature`."""
+                    hints: bool = True, pipeline: Sequence = ()
+                    ) -> TransferPlan:
+    """Compile an N-D affine transfer once: ``tensor_nd_batch`` → spec
+    mid-end `pipeline` → ``legalize_batch``, with every burst's offsets
+    recorded relative to the transfer's single (src, dst) base pair
+    (``n_desc == 1``) — the strides are baked into the frozen offset
+    table, which is why they are part of `nd_plan_signature`."""
     tb = tensor_nd_batch(nd)
+    for stage in pipeline:
+        tb = stage.apply(tb)
     legal = legalize_batch(tb, bus_width=bus_width)
     check_legal_batch(legal, bus_width=bus_width)
     nb = len(legal)
@@ -440,9 +489,10 @@ class PlanCache:
     look the signature up, capture on miss, and return the legalized
     stream for *this* submission's addresses (a pure rebind on hits).
     A shared cache may serve several engines as long as they agree on the
-    structural parameters baked into the signature (bus width is; custom
-    mid-end chains and multi-back-end splits are not plannable and must
-    bypass — `IDMAEngine` enforces this).
+    structural parameters baked into the signature (bus width and the
+    spec mid-end pipeline are; legacy object-level mid-end chains and
+    multi-back-end splits are not plannable and must bypass —
+    `IDMAEngine` enforces this).
     """
 
     def __init__(self, capacity: int = 64, hints: bool = True) -> None:
@@ -469,49 +519,57 @@ class PlanCache:
             self._plans.popitem(last=False)
             self.stats.evictions += 1
 
-    def plan_for(self, batch: DescriptorBatch, bus_width: int = 8
-                 ) -> Tuple[TransferPlan, bool]:
-        """(plan, hit) for a descriptor batch; captures on miss."""
-        key = plan_signature(batch, bus_width)
+    def plan_for(self, batch: DescriptorBatch, bus_width: int = 8,
+                 pipeline: Sequence = ()) -> Tuple[TransferPlan, bool]:
+        """(plan, hit) for a descriptor batch; captures on miss —
+        `pipeline` (spec mid-end stages) is part of both the key and the
+        captured lowering."""
+        key = plan_signature(batch, bus_width, pipeline=pipeline)
         plan = self._plans.get(key)
         if plan is not None:
             self.stats.hits += 1
             self._plans.move_to_end(key)
             return plan, True
         self.stats.misses += 1
-        plan = capture_plan(batch, bus_width=bus_width, hints=self.hints)
+        plan = capture_plan(batch, bus_width=bus_width, hints=self.hints,
+                            pipeline=pipeline)
         self._insert(key, plan)
         return plan, False
 
-    def nd_plan_for(self, nd: NdTransfer, bus_width: int = 8
-                    ) -> Tuple[TransferPlan, bool]:
+    def nd_plan_for(self, nd: NdTransfer, bus_width: int = 8,
+                    pipeline: Sequence = ()) -> Tuple[TransferPlan, bool]:
         """(plan, hit) for an N-D affine transfer; captures on miss."""
-        key = nd_plan_signature(nd, bus_width)
+        key = nd_plan_signature(nd, bus_width, pipeline=pipeline)
         plan = self._plans.get(key)
         if plan is not None:
             self.stats.hits += 1
             self._plans.move_to_end(key)
             return plan, True
         self.stats.misses += 1
-        plan = capture_nd_plan(nd, bus_width=bus_width, hints=self.hints)
+        plan = capture_nd_plan(nd, bus_width=bus_width, hints=self.hints,
+                               pipeline=pipeline)
         self._insert(key, plan)
         return plan, False
 
     # -- submission entry points ------------------------------------------
 
-    def replay_batch(self, batch: DescriptorBatch, bus_width: int = 8
+    def replay_batch(self, batch: DescriptorBatch, bus_width: int = 8,
+                     pipeline: Sequence = ()
                      ) -> Tuple[DescriptorBatch, TransferPlan]:
         """Legalized stream for `batch` via its plan (captured on miss):
-        the drop-in replacement for ``legalize_batch`` on repeat-heavy
-        submission paths."""
-        plan, _ = self.plan_for(batch, bus_width=bus_width)
+        the drop-in replacement for ``pipeline stages + legalize_batch``
+        on repeat-heavy submission paths."""
+        plan, _ = self.plan_for(batch, bus_width=bus_width,
+                                pipeline=pipeline)
         return plan.rebind(batch.src_addr, batch.dst_addr,
                            transfer_id=batch.transfer_id), plan
 
-    def replay_nd(self, nd: NdTransfer, bus_width: int = 8
+    def replay_nd(self, nd: NdTransfer, bus_width: int = 8,
+                  pipeline: Sequence = ()
                   ) -> Tuple[DescriptorBatch, TransferPlan]:
         """Legalized stream for an N-D transfer via its plan template."""
-        plan, _ = self.nd_plan_for(nd, bus_width=bus_width)
+        plan, _ = self.nd_plan_for(nd, bus_width=bus_width,
+                                   pipeline=pipeline)
         return plan.rebind(
             np.asarray([nd.src_addr], dtype=np.int64),
             np.asarray([nd.dst_addr], dtype=np.int64),

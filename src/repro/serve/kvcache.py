@@ -35,9 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DescriptorBatch, IDMAEngine, MemoryMap, PlanCache,
-                        Protocol, concat_batches, execute_batch,
-                        legalize_batch)
+from repro.core import (DescriptorBatch, EngineSpec, IDMAEngine, MemoryMap,
+                        PlanCache, Protocol, build_engine, concat_batches,
+                        edge_ai, execute_batch, legalize_batch)
 
 
 @dataclass
@@ -235,12 +235,18 @@ class PagedKVDMA:
     pass a `PlanCache` to share one, or ``False`` to disable.  A
     caller-supplied engine keeps whatever ``plan_cache`` it was built
     with — engine-level planning stays opt-in.
+
+    Engine composition is spec-driven: when no `engine` is passed, one is
+    built from `spec` (default: the ``edge_ai`` preset with this cache's
+    channel count) over the HBM-pool/VMEM-staging memory map —
+    ``PagedKVDMA.from_spec`` is the explicit entry point.
     """
 
     def __init__(self, layout: KVLayout, max_batch: int, max_len: int,
                  engine: Optional[IDMAEngine] = None,
                  num_channels: int = 1, timing: bool = True,
-                 plan_cache: Union[bool, PlanCache] = True) -> None:
+                 plan_cache: Union[bool, PlanCache] = True,
+                 spec: Optional[EngineSpec] = None) -> None:
         self.layout = layout
         self.timing = timing
         if plan_cache is True:
@@ -275,8 +281,12 @@ class PagedKVDMA:
             Protocol.VMEM: 2 * gather_bytes + 2 * stage_bytes,
         })
         if engine is None:
-            engine = IDMAEngine(mem=mem, num_channels=num_channels,
-                                plan_cache=self.plan_cache)
+            if spec is None:
+                spec = edge_ai(num_channels=num_channels)
+            engine = build_engine(
+                spec, mem=mem,
+                plan_cache=self.plan_cache
+                if self.plan_cache is not None else False)
         elif engine.mem is None:
             raise ValueError("PagedKVDMA needs an engine with a MemoryMap")
         else:
@@ -292,6 +302,19 @@ class PagedKVDMA:
                         f"needs {arr.size} B")
         self.engine = engine
         self.mem = engine.mem
+
+    @classmethod
+    def from_spec(cls, spec: EngineSpec, layout: KVLayout, max_batch: int,
+                  max_len: int, timing: bool = True,
+                  plan_cache: Union[bool, PlanCache] = True
+                  ) -> "PagedKVDMA":
+        """Build a paged KV cache whose engine is composed from `spec`
+        (front-end × mid-end pipeline × back-end × channels — see
+        `core.spec`), over the pool/staging memory map this cache sizes
+        for itself.  The spec must keep the HBM/VMEM protocol ports the
+        append/gather descriptor streams target."""
+        return cls(layout, max_batch=max_batch, max_len=max_len,
+                   timing=timing, plan_cache=plan_cache, spec=spec)
 
     # -- pool views ---------------------------------------------------------
 
@@ -314,18 +337,21 @@ class PagedKVDMA:
         functional data plane (`execute_batch`).
 
         On the functional path a configured plan cache replaces the
-        per-call `legalize_batch` with a captured-plan rebind.  `site`
-        names the builder ("append"/"gather") whose output structure is a
-        pure function of (layout, row count): the captured plan is also
+        per-call `pipeline + legalize_batch` with a captured-plan rebind
+        (the engine's spec mid-end pipeline joins both the capture and
+        the signature, exactly as on the timing path).  `site` names the
+        builder ("append"/"gather") whose output structure is a pure
+        function of (layout, row count): the captured plan is also
         stored as that site's template, which lets `append`/`gather`
         bypass descriptor building *and* the signature hash on later
         steps (`_replay_move`)."""
         if self.timing:
             return self.engine.dispatch_batch(desc)
         eng = self.engine
-        if self.plan_cache is not None:
+        if self.plan_cache is not None and eng._plannable:
             plan, _ = self.plan_cache.plan_for(desc,
-                                               bus_width=eng.bus_width)
+                                               bus_width=eng.bus_width,
+                                               pipeline=eng.pipeline)
             if site is not None and self._template_modulus is not None \
                     and self.layout.row_bytes % self._template_modulus == 0:
                 self._templates[(site, len(desc))] = plan
@@ -335,7 +361,20 @@ class PagedKVDMA:
                                 transfer_id=desc.transfer_id)
             hints = plan.hints
         else:
-            legal = legalize_batch(desc, bus_width=eng.bus_width)
+            if self.plan_cache is not None:
+                # unplannable engine (unsigned stage): surfaced bypass,
+                # mirroring IDMAEngine._lower_ports
+                self.plan_cache.stats.bypasses += 1
+                eng.stats.plan_bypasses += 1
+            batch = desc
+            for stage in eng.pipeline:
+                batch = stage.apply(batch)
+            if eng.midends:
+                ones = batch.to_transfers()
+                for me in eng.midends:
+                    ones = me(ones)
+                batch = DescriptorBatch.from_transfers(ones)
+            legal = legalize_batch(batch, bus_width=eng.bus_width)
             hints = None
         moved = execute_batch(legal, eng.mem, bus_width=eng.bus_width,
                               check=False, hints=hints)
@@ -357,15 +396,23 @@ class PagedKVDMA:
         computed from the protocol rules so a paged/pow2 protocol pair
         would correctly disable the shortcut rather than silently replay
         a stale cut structure."""
-        if self.timing or self.plan_cache is None:
+        if self.timing or self.plan_cache is None or \
+                not self.engine._plannable:
             return None
         if self._template_modulus is None:
+            import math
             from repro.core import structure_modulus
             from repro.core.descriptor import PROTO_CODE
             codes = np.asarray([PROTO_CODE[Protocol.HBM],
                                 PROTO_CODE[Protocol.VMEM]], dtype=np.uint8)
-            self._template_modulus = structure_modulus(
-                codes, codes, self.engine.bus_width)
+            m = structure_modulus(codes, codes, self.engine.bus_width)
+            # spec mid-end stages widen the residue modulus exactly as in
+            # core.plan: an address-sensitive stage (e.g. MpSplitStage)
+            # must disable the signature-skipping shortcut unless the
+            # builders' address granule still covers it
+            for stage in self.engine.pipeline:
+                m = math.lcm(m, max(int(stage.modulus()), 1))
+            self._template_modulus = m
         if self.layout.row_bytes % self._template_modulus != 0:
             return None
         plan = self._templates.get((site, n_rows))

@@ -1,0 +1,46 @@
+"""Public-API snapshot: ``repro.core.__all__`` vs the checked-in manifest.
+
+The composable instantiation API (`core.spec`) *is* the product — this
+test makes every addition/removal to the public surface an explicit,
+reviewable diff of ``tests/api_surface.txt`` instead of an accident.
+Regenerate the manifest after an intentional change with::
+
+    PYTHONPATH=src python -c "
+    import repro.core as c
+    for n in sorted(c.__all__): print(n)" > tests/api_surface.txt
+
+Runs in the CI docs job (which installs requirements.txt — importing
+repro.core pulls in jax via core.instream).
+"""
+
+import pathlib
+
+MANIFEST = pathlib.Path(__file__).with_name("api_surface.txt")
+
+
+def test_public_api_matches_manifest():
+    import repro.core as core
+
+    want = [ln for ln in MANIFEST.read_text().splitlines() if ln.strip()]
+    got = sorted(core.__all__)
+    added = sorted(set(got) - set(want))
+    removed = sorted(set(want) - set(got))
+    assert got == sorted(want), (
+        f"repro.core public API drifted from tests/api_surface.txt "
+        f"(added: {added or '-'}, removed: {removed or '-'}). If the "
+        f"change is intentional, regenerate the manifest (see module "
+        f"docstring).")
+
+
+def test_manifest_names_resolve():
+    import repro.core as core
+
+    for name in (ln.strip() for ln in MANIFEST.read_text().splitlines()):
+        if name:
+            assert hasattr(core, name), f"manifest names missing {name!r}"
+
+
+def test_all_is_sorted_unique_in_manifest():
+    names = [ln for ln in MANIFEST.read_text().splitlines() if ln.strip()]
+    assert names == sorted(names)
+    assert len(names) == len(set(names))

@@ -1,0 +1,408 @@
+"""Composable instantiation API (core.spec).
+
+* Preset parity: every named preset built via ``build_engine(spec)`` is
+  byte- and cycle-identical to the equivalent hand-wired `IDMAEngine`,
+  with the plan cache on and off.
+* Spec mid-end pipelines stay on the vectorized batch path and remain
+  plan-cacheable (hits verified via `plan_cache_profile`).
+* Eager validation: spec field errors, `ErrorPolicy` verb validation at
+  construction, and the `plan_cache=` × object-level ``midends=``
+  construction error (bypasses surfaced in `EngineStats`).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (BackendSpec, ChannelSpec, CustomStage,
+                        DescriptorBatch, EngineSpec, ErrorPolicy,
+                        FrontendSpec, IDMAEngine, MemoryMap, MpDistStage,
+                        MpSplitStage, NdTransfer, PlanCache, Protocol,
+                        RtReplicateStage, TensorDim, Transfer1D,
+                        build_engine, build_frontend, make_frontend,
+                        preset, spec_of)
+from repro.core.analytics import plan_cache_profile
+from repro.core.spec import PRESETS
+
+PRESET_NAMES = sorted(PRESETS)
+
+
+def _traffic(spec):
+    """(DescriptorBatch, NdTransfer) exercising the preset's protocol
+    ports: a ragged scatter batch plus a strided 3-D gather."""
+    protos = spec.backend.protocols or (Protocol.AXI4,)
+    sp, dp = protos[0], protos[-1]
+    rng = np.random.default_rng(7)
+    n = 48
+    src = np.cumsum(rng.integers(1, 700, n)).astype(np.int64)
+    dst = (200_000 + np.cumsum(rng.integers(1, 900, n))).astype(np.int64)
+    if dp != sp:
+        dst -= 200_000          # separate address spaces: no overlap risk
+    length = rng.integers(1, 600, n).astype(np.int64)
+    batch = DescriptorBatch.from_arrays(
+        src_addr=src, dst_addr=dst, length=length,
+        src_protocol=sp, dst_protocol=dp)
+    nd = NdTransfer(128, 300_000 if dp == sp else 66_000, 96,
+                    (TensorDim(160, 96, 7), TensorDim(1120, 672, 3)),
+                    src_protocol=sp, dst_protocol=dp)
+    return batch, nd
+
+
+def _fill(mem, spec, seed=3):
+    rng = np.random.default_rng(seed)
+    for proto, _ in spec.mem_spaces:
+        space = mem.spaces[proto]
+        space[:1 << 16] = rng.integers(0, 256, 1 << 16, dtype=np.uint8)
+
+
+def _hand_wired(spec, mem, cache):
+    """The kwarg-constructor equivalent of ``build_engine(spec)``."""
+    return IDMAEngine(
+        mem=mem,
+        pipeline=spec.midend,
+        num_backends=spec.backend.num_ports,
+        backend_boundary=spec.backend.boundary,
+        bus_width=spec.backend.bus_width,
+        error_policy=spec.backend.error_policy,
+        sim_config=spec.effective_sim_config,
+        src_system=spec.src_system,
+        dst_system=spec.dst_system,
+        num_channels=spec.channels.count,
+        channel_scheme=spec.channels.scheme,
+        channel_boundary=spec.channels.boundary,
+        plan_cache=PlanCache() if cache else None,
+    )
+
+
+class TestPresetParity:
+    @pytest.mark.parametrize("name", PRESET_NAMES)
+    @pytest.mark.parametrize("cache", [False, True])
+    def test_byte_and_cycle_identical(self, name, cache):
+        spec = preset(name)
+        mem_a = MemoryMap.create(dict(spec.mem_spaces))
+        mem_b = MemoryMap.create(dict(spec.mem_spaces))
+        _fill(mem_a, spec)
+        _fill(mem_b, spec)
+        built = build_engine(spec, mem=mem_a,
+                             plan_cache=True if cache else False)
+        wired = _hand_wired(spec, mem_b, cache)
+        batch, nd = _traffic(spec)
+
+        for eng in (built, wired):
+            eng.dispatch_batch(batch)
+            eng.wait_all()
+            eng.submit(nd)
+            eng.submit(nd)       # repeat: plan-cache replay on `built`
+        for proto, _ in spec.mem_spaces:
+            assert np.array_equal(mem_a.spaces[proto],
+                                  mem_b.spaces[proto]), \
+                f"{name}: {proto} bytes diverge (cache={cache})"
+
+        assert built.simulate(nd).cycles == wired.simulate(nd).cycles
+        ra = built.last_channel_result.aggregate
+        rb = wired.last_channel_result.aggregate
+        assert (ra.cycles, ra.bus_beats, ra.n_bursts) == \
+            (rb.cycles, rb.bus_beats, rb.n_bursts)
+        assert built.stats == wired.stats
+        if cache:
+            assert built.plan_cache.stats.hits > 0
+
+    @pytest.mark.parametrize("name", PRESET_NAMES)
+    def test_preset_metadata(self, name):
+        spec = preset(name)
+        assert spec.name == name
+        assert spec.cacheable()
+        eng = build_engine(spec)
+        assert eng.spec is spec
+        assert eng.sim_config is spec.effective_sim_config
+        # presets bundle a working default memory map
+        assert eng.mem is not None
+        fe = build_frontend(spec, eng)
+        assert type(fe).__name__.lower().startswith(
+            {"reg": "reg", "desc": "desc", "inst": "inst"}[
+                spec.frontend.kind])
+
+    def test_unknown_preset(self):
+        with pytest.raises(ValueError, match="unknown engine preset"):
+            preset("tenstorrent")
+
+
+class TestSpecPipeline:
+    PIPE = (MpSplitStage(boundary=256),
+            MpDistStage(num_ports=2, boundary=256))
+
+    def _spec(self, cache):
+        return EngineSpec(
+            name="split_dist", midend=self.PIPE, plan_cache=cache,
+            mem_spaces=((Protocol.AXI4, 1 << 17),))
+
+    def test_pipeline_stays_on_batch_path(self, monkeypatch):
+        """A spec pipeline must never fall back to the object bridge."""
+        eng = build_engine(self._spec(False))
+        _fill(eng.mem, eng.spec)
+        monkeypatch.setattr(
+            DescriptorBatch, "to_transfers",
+            lambda self: (_ for _ in ()).throw(
+                AssertionError("object bridge used")))
+        nd = NdTransfer(0, 70_000, 64, (TensorDim(128, 64, 8),))
+        eng.submit(nd)
+        want = np.concatenate([
+            eng.mem.spaces[Protocol.AXI4][i * 128:i * 128 + 64]
+            for i in range(8)])
+        assert np.array_equal(
+            eng.mem.spaces[Protocol.AXI4][70_000:70_000 + 512], want)
+
+    def test_pipeline_plan_cache_hits_and_identity(self):
+        """ND → split → dist replays from the plan cache: hits recorded,
+        bytes and cycles identical to the uncached pipeline engine."""
+        cached = build_engine(self._spec(8))
+        plain = build_engine(self._spec(False))
+        _fill(cached.mem, cached.spec)
+        _fill(plain.mem, plain.spec)
+        m = 4096                      # AXI4 page: residue-safe rebind step
+        for step in range(6):
+            nd = NdTransfer(0, 65_536 + step * m, 64,
+                            (TensorDim(128, 64, 8),))
+            cached.submit(nd)
+            plain.submit(nd)
+            assert cached.simulate(nd).cycles == plain.simulate(nd).cycles
+        assert np.array_equal(cached.mem.spaces[Protocol.AXI4],
+                              plain.mem.spaces[Protocol.AXI4])
+        prof = plan_cache_profile(cached.plan_cache)
+        assert prof["misses"] == 1
+        assert prof["hits"] >= 5      # submits + simulates replay
+        assert prof["bypasses"] == 0
+        assert cached.stats.plan_bypasses == 0
+
+    def test_pipeline_in_signature(self):
+        """Different pipelines must never share a plan."""
+        cache = PlanCache()
+        a = build_engine(EngineSpec(
+            midend=(MpSplitStage(boundary=256),),
+            mem_spaces=((Protocol.AXI4, 1 << 17),)), plan_cache=cache)
+        b = build_engine(EngineSpec(
+            midend=(MpSplitStage(boundary=512),),
+            mem_spaces=((Protocol.AXI4, 1 << 17),)), plan_cache=cache)
+        t = Transfer1D(0, 70_000, 1024)
+        a.submit(t)
+        b.submit(t)
+        assert cache.stats.misses == 2
+        assert len(cache) == 2
+
+    def test_split_boundary_respected_on_replay(self):
+        """Replayed plans keep the stage's cut structure: no burst
+        crosses the split boundary even after an address rebind."""
+        eng = build_engine(self._spec(8))
+        _fill(eng.mem, eng.spec)
+        for step in range(3):
+            ports = eng.lower_batch(
+                Transfer1D(17 + step * 4096, 70_001 + step * 4096, 3000))
+            (legal,) = ports
+            start = legal.dst_addr // 256
+            end = (legal.dst_addr + legal.length - 1) // 256
+            assert np.array_equal(start, end)
+        assert eng.plan_cache.stats.hits == 2
+
+    def test_kvdma_functional_path_honours_pipeline(self):
+        """PagedKVDMA(timing=False) must run the spec's mid-end pipeline
+        exactly like the timing path — same pool bytes either way."""
+        from repro.serve.kvcache import (KVLayout, PagedKVDMA, PagePool,
+                                         make_page_tables)
+        import dataclasses
+        from repro.core import edge_ai
+        layout = KVLayout(n_pages=32, page_size=2, n_kv_heads=1,
+                          head_dim=8, itemsize=2)
+        base = edge_ai(num_channels=1)
+        # boundary 16 < page_bytes 32: gather rows really do split
+        spec = dataclasses.replace(
+            base, midend=(MpSplitStage(boundary=16),))
+        rng = np.random.default_rng(1)
+        kv = rng.standard_normal((8, 2, 4, 1, 8)).astype(np.float16)
+        pools = {}
+        for timing in (True, False):
+            dma = PagedKVDMA.from_spec(spec, layout, max_batch=4,
+                                       max_len=16, timing=timing)
+            tables = make_page_tables(PagePool(32, 2), 4, 16)
+            for pos in range(8):
+                dma.append(tables, pos, kv[pos, 0], kv[pos, 1])
+            k, v = dma.gather(tables, 8)
+            pools[timing] = (dma.mem.spaces[Protocol.HBM].copy(), k, v)
+        assert np.array_equal(pools[True][0], pools[False][0])
+        assert np.array_equal(pools[True][1], pools[False][1])
+        assert np.array_equal(pools[True][2], pools[False][2])
+
+    def test_rt_replicate_stage(self):
+        stage = RtReplicateStage(period=100, horizon=350)
+        batch = DescriptorBatch.from_arrays(
+            src_addr=np.array([0, 64]), dst_addr=np.array([128, 256]),
+            length=np.array([32, 32]))
+        out = stage.apply(batch)
+        assert len(out) == 4 * 2      # 4 launches within the horizon
+        assert stage.signature() is not None
+        with pytest.raises(ValueError):
+            RtReplicateStage(period=0, horizon=10)
+
+    def test_unsigned_custom_stage_bypasses_and_counts(self):
+        stage = CustomStage(fn=lambda b: b, name="opaque")
+        assert stage.signature() is None
+        spec = EngineSpec(midend=(stage,),
+                          mem_spaces=((Protocol.AXI4, 1 << 17),))
+        assert not spec.cacheable()
+        eng = build_engine(spec, plan_cache=True)
+        _fill(eng.mem, spec)
+        eng.submit(Transfer1D(0, 70_000, 256))
+        assert eng.stats.plan_bypasses == 1
+        assert eng.plan_cache.stats.bypasses == 1
+
+    def test_signed_custom_stage_is_cacheable(self):
+        stage = CustomStage(fn=lambda b: b, name="identity", key="id")
+        spec = EngineSpec(midend=(stage,),
+                          mem_spaces=((Protocol.AXI4, 1 << 17),))
+        assert spec.cacheable()
+        eng = build_engine(spec, plan_cache=True)
+        _fill(eng.mem, spec)
+        eng.submit(Transfer1D(0, 70_000, 256))
+        eng.submit(Transfer1D(0, 70_000, 256))
+        assert eng.plan_cache.stats.hits == 1
+        assert eng.stats.plan_bypasses == 0
+
+
+class TestValidation:
+    def test_frontend_spec(self):
+        with pytest.raises(ValueError, match="unknown front-end kind"):
+            FrontendSpec(kind="mmio")
+        with pytest.raises(ValueError, match="word_bits"):
+            FrontendSpec(word_bits=16)
+        with pytest.raises(ValueError, match="doorbell"):
+            FrontendSpec(kind="desc", word_bits=64, doorbell="polled")
+        # paper Table 1: desc_64 / inst_64 only
+        with pytest.raises(ValueError, match="64-bit"):
+            FrontendSpec(kind="desc")
+        with pytest.raises(ValueError, match="64-bit"):
+            FrontendSpec(kind="inst", word_bits=32)
+        # async doorbells are a desc-only option, never silently dropped
+        with pytest.raises(ValueError, match="desc front-end option"):
+            FrontendSpec(kind="reg", doorbell="async")
+        assert FrontendSpec(kind="reg", ndims=3).name == "reg_32_3d"
+        assert FrontendSpec(kind="desc", word_bits=64).name == "desc_64"
+        assert FrontendSpec(kind="inst", word_bits=64).name == "inst_64"
+
+    def test_backend_spec(self):
+        with pytest.raises(ValueError, match="boundary"):
+            BackendSpec(num_ports=2)
+        with pytest.raises(ValueError, match="power of two"):
+            BackendSpec(bus_width=12)
+
+    def test_channel_spec(self):
+        with pytest.raises(ValueError, match="count"):
+            ChannelSpec(count=0)
+        with pytest.raises(ValueError, match="boundary"):
+            ChannelSpec(count=2, scheme="address")
+
+    def test_midend_stage_specs(self):
+        with pytest.raises(ValueError, match="power of two"):
+            MpSplitStage(boundary=384)
+        with pytest.raises(ValueError, match="boundary"):
+            MpDistStage(num_ports=2)          # address scheme, no boundary
+        with pytest.raises(TypeError, match="MidendStage"):
+            EngineSpec(midend=(lambda ts: ts,))
+
+    def test_error_policy_validated_eagerly(self):
+        """Satellite: a verb typo fails at construction with the verb
+        list, never deep inside the drain loop."""
+        with pytest.raises(ValueError, match="'continue', 'abort', "
+                                             "'replay'"):
+            ErrorPolicy(action="retry")
+        with pytest.raises(ValueError, match="max_replays"):
+            ErrorPolicy(max_replays=-1)
+        # and through the spec layer
+        with pytest.raises(ValueError, match="error-policy"):
+            BackendSpec(error_policy=ErrorPolicy(action="ignore"))
+
+    def test_plan_cache_with_legacy_midends_raises(self):
+        """Satellite: plan_cache= + object-level midends= used to bypass
+        the cache silently per submission — now a construction error."""
+        mem = MemoryMap.create({Protocol.AXI4: 1 << 16})
+        with pytest.raises(ValueError, match="not plan-cacheable"):
+            IDMAEngine(mem=mem, midends=[lambda ts: ts],
+                       plan_cache=PlanCache())
+
+    def test_legacy_midends_deprecated_but_working(self):
+        mem = MemoryMap.create({Protocol.AXI4: 1 << 16})
+        data = np.random.default_rng(0).integers(0, 256, 1024,
+                                                 dtype=np.uint8)
+        mem.spaces[Protocol.AXI4][:1024] = data
+        with pytest.warns(DeprecationWarning, match="midends"):
+            eng = IDMAEngine(mem=mem, midends=[lambda ts: ts])
+        eng.submit(Transfer1D(0, 2048, 1024))
+        assert np.array_equal(mem.spaces[Protocol.AXI4][2048:3072], data)
+
+    def test_multi_backend_bypass_counted(self):
+        mem = MemoryMap.create({Protocol.AXI4: 1 << 16})
+        eng = IDMAEngine(mem=mem, num_backends=2, backend_boundary=512,
+                         plan_cache=PlanCache())
+        eng.submit(Transfer1D(0, 4096, 1024))
+        assert eng.stats.plan_bypasses == 1
+
+    def test_spec_snapshot_of_legacy_engine(self):
+        eng = IDMAEngine(bus_width=16, num_channels=2)
+        spec = eng.spec
+        assert spec.backend.bus_width == 16
+        assert spec.channels.count == 2
+        assert spec.signature() == eng.spec.signature()
+
+    def test_make_frontend_kinds(self):
+        eng = IDMAEngine(mem=MemoryMap.create({Protocol.AXI4: 1 << 16}))
+        assert make_frontend("reg", eng, ndims=2).name == "reg_32_2d"
+        fe = make_frontend("desc", eng, memory=bytearray(256),
+                           async_submit=True)
+        assert fe.async_submit
+        make_frontend("inst", eng)
+        with pytest.raises(ValueError, match="unknown front-end kind"):
+            make_frontend("axi", eng)
+        with pytest.raises(ValueError, match="memory"):
+            make_frontend("desc", eng)
+
+    def test_spec_of_roundtrip_equivalence(self):
+        """Rebuilding from a legacy engine's spec snapshot gives an
+        engine with identical lowering and timing."""
+        spec = spec_of(IDMAEngine(bus_width=8, num_backends=2,
+                                  backend_boundary=1024))
+        rebuilt = build_engine(spec)
+        src = IDMAEngine(bus_width=8, num_backends=2,
+                         backend_boundary=1024)
+        t = Transfer1D(100, 5000, 3000)
+        got = [b.length.sum() for b in rebuilt.lower_batch(t)]
+        want = [b.length.sum() for b in src.lower_batch(t)]
+        assert got == want
+        assert rebuilt.simulate(t).cycles == src.simulate(t).cycles
+
+    def test_spec_of_bridges_legacy_midends(self):
+        """Rebuilding from a legacy-midend engine's spec snapshot runs
+        the callable through the object bridge — same bytes out."""
+        def halve(ts):
+            out = []
+            for t in ts:
+                h = t.length // 2
+                out.append(t.shifted(0, 0, h))
+                out.append(t.shifted(h, h, t.length - h))
+            return out
+
+        def mk():
+            mem = MemoryMap.create({Protocol.AXI4: 1 << 16})
+            data = np.random.default_rng(5).integers(
+                0, 256, 4096, dtype=np.uint8)
+            mem.spaces[Protocol.AXI4][:4096] = data
+            return mem, data
+
+        mem_a, data = mk()
+        with pytest.warns(DeprecationWarning):
+            legacy = IDMAEngine(mem=mem_a, midends=[halve])
+        rebuilt = build_engine(legacy.spec, mem=mk()[0])
+        t = Transfer1D(0, 8192, 4096)
+        legacy.submit(t)
+        rebuilt.submit(t)
+        assert np.array_equal(mem_a.spaces[Protocol.AXI4][8192:8192 + 4096],
+                              data)
+        assert np.array_equal(rebuilt.mem.spaces[Protocol.AXI4],
+                              mem_a.spaces[Protocol.AXI4])
+        assert not rebuilt.spec.cacheable()
