@@ -64,19 +64,25 @@ def _mem(n: int = N, slot: int = SLOT, seed: int = 1) -> MemoryMap:
     return mem
 
 
-def run(csv_rows):
-    legal = legalize_batch(scatter_gather_stream(), bus_width=BUS)
+def run(csv_rows, quick=False):
+    # --quick shrinks the streams 20x and relaxes the speedup gate: the
+    # byte-identity checks still run in full, only the timing headline
+    # loses precision (quick runs never write trajectory snapshots)
+    n = N // 20 if quick else N
+    gate = 3.0 if quick else 10.0
+    tag = "50k" if quick else "1M"
+    legal = legalize_batch(scatter_gather_stream(n=n), bus_width=BUS)
     total = int(legal.length.sum())
 
     # 1 — scalar oracle vs batch path, byte-identical destinations
-    mem_obj = _mem()
+    mem_obj = _mem(n=n)
     bursts = legal.to_transfers()          # object materialization untimed
     t0 = time.perf_counter()
     moved_obj = execute(bursts, mem_obj, bus_width=BUS)
     t_obj = time.perf_counter() - t0
     del bursts
 
-    mem_bat = _mem()
+    mem_bat = _mem(n=n)
     t_bat = float("inf")
     for _ in range(3):
         mem_bat.spaces[Protocol.VMEM][:] = 0
@@ -91,25 +97,25 @@ def run(csv_rows):
     del mem_obj
     speedup = t_obj / t_bat
     gbps = total / t_bat / 1e9
-    csv_rows.append(("dataplane_scatter_gather_1M_scalar_s", t_obj, ""))
-    csv_rows.append(("dataplane_scatter_gather_1M_batch_s", t_bat, ""))
-    csv_rows.append(("dataplane_scatter_gather_1M_speedup", speedup,
-                     "target>=10x"))
-    csv_rows.append(("dataplane_scatter_gather_1M_GBps", gbps, ""))
+    csv_rows.append((f"dataplane_scatter_gather_{tag}_scalar_s", t_obj, ""))
+    csv_rows.append((f"dataplane_scatter_gather_{tag}_batch_s", t_bat, ""))
+    csv_rows.append((f"dataplane_scatter_gather_{tag}_speedup", speedup,
+                     f"target>={gate:.0f}x"))
+    csv_rows.append((f"dataplane_scatter_gather_{tag}_GBps", gbps, ""))
 
     # 2 — dense upper bound: same bursts, linear destination walk
-    dense = legalize_batch(scatter_gather_stream(scatter=False),
+    dense = legalize_batch(scatter_gather_stream(n=n, scatter=False),
                            bus_width=BUS)
     t0 = time.perf_counter()
     execute_batch(dense, mem_bat, bus_width=BUS)
     t_dense = time.perf_counter() - t0
-    csv_rows.append(("dataplane_linear_1M_batch_s", t_dense, ""))
+    csv_rows.append((f"dataplane_linear_{tag}_batch_s", t_dense, ""))
 
-    # 3 — generator data plane: 1M pseudorandom Init bursts
+    # 3 — generator data plane: pseudorandom Init bursts at scale
     init = DescriptorBatch.from_arrays(
-        src_addr=np.arange(N, dtype=np.int64) * SLOT,
-        dst_addr=np.arange(N, dtype=np.int64) * SLOT,
-        length=np.full(N, SLOT, dtype=np.int64),
+        src_addr=np.arange(n, dtype=np.int64) * SLOT,
+        dst_addr=np.arange(n, dtype=np.int64) * SLOT,
+        length=np.full(n, SLOT, dtype=np.int64),
         src_protocol=Protocol.INIT, dst_protocol=Protocol.VMEM,
         options=BackendOptions(init_pattern=InitPattern.PSEUDORANDOM,
                                init_value=7))
@@ -117,18 +123,18 @@ def run(csv_rows):
     moved_init = execute_batch(legalize_batch(init, bus_width=BUS), mem_bat,
                                bus_width=BUS)
     t_init = time.perf_counter() - t0
-    csv_rows.append(("dataplane_init_prng_1M_s", t_init, ""))
-    csv_rows.append(("dataplane_init_prng_1M_GBps",
+    csv_rows.append((f"dataplane_init_prng_{tag}_s", t_init, ""))
+    csv_rows.append((f"dataplane_init_prng_{tag}_GBps",
                      moved_init / t_init / 1e9, ""))
 
     LAST.update({
-        "scatter_gather_1M_scalar_s": t_obj,
-        "scatter_gather_1M_batch_s": t_bat,
-        "scatter_gather_1M_speedup": speedup,
-        "scatter_gather_1M_GBps": gbps,
-        "linear_1M_batch_s": t_dense,
-        "init_prng_1M_s": t_init,
+        f"scatter_gather_{tag}_scalar_s": t_obj,
+        f"scatter_gather_{tag}_batch_s": t_bat,
+        f"scatter_gather_{tag}_speedup": speedup,
+        f"scatter_gather_{tag}_GBps": gbps,
+        f"linear_{tag}_batch_s": t_dense,
+        f"init_prng_{tag}_s": t_init,
         "bytes_moved": total,
     })
-    assert speedup >= 10.0, \
-        f"execute_batch only {speedup:.1f}x over scalar (need >= 10x)"
+    assert speedup >= gate, \
+        f"execute_batch only {speedup:.1f}x over scalar (need >= {gate}x)"

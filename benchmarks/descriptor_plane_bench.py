@@ -63,61 +63,77 @@ def scatter_gather_batch(n: int = SCATTER_N, seed: int = 0
         length=rng.integers(1, 512, n))
 
 
-def run(csv_rows):
+def run(csv_rows, quick=False):
     cfg = EngineConfig(bus_width=4, n_outstanding=16)
+    # --quick shrinks the copied total 8x, trims the sweep to one memory
+    # system and three fragment sizes, and relaxes the speedup gate; the
+    # cycle-identity assertions still run in full (quick runs never write
+    # trajectory snapshots)
+    total = TOTAL // 8 if quick else TOTAL
+    gate = 3.0 if quick else 10.0
+    sweep_systems = (SRAM,) if quick else SWEEP_SYSTEMS
+    sweep_frags = (1, 16, 256) if quick else SWEEP_FRAGS
+    scatter_n = SCATTER_N // 20 if quick else SCATTER_N
 
-    # 1 — object vs batch on the 64 KiB / 1 B cell (like-for-like
-    # best-of-N on both sides so the tracked speedup is not warm-up bias;
-    # one higher-repeat retry guards the gate against transient load)
+    # 1 — object vs batch on the worst-case 1 B fragment cell
+    # (like-for-like best-of-N on both sides so the tracked speedup is
+    # not warm-up bias; one higher-repeat retry guards the gate against
+    # transient load)
     t_obj = t_bat = speedup = 0.0
     for repeats in (2, 5):
         o, r_obj = _best_of(
-            lambda: fragmented_copy_reference(TOTAL, 1, cfg, SRAM, SRAM),
+            lambda: fragmented_copy_reference(total, 1, cfg, SRAM, SRAM),
             repeats=repeats)
         b, r_bat = _best_of(
-            lambda: fragmented_copy(TOTAL, 1, cfg, SRAM, SRAM),
+            lambda: fragmented_copy(total, 1, cfg, SRAM, SRAM),
             repeats=repeats)
         assert r_obj.cycles == r_bat.cycles, \
             f"batch path diverged: {r_obj.cycles} != {r_bat.cycles}"
         t_obj, t_bat = o, b
         speedup = t_obj / t_bat
-        if speedup >= 10.0:
+        if speedup >= gate:
             break
-    csv_rows.append(("descplane_64KiB_1B_object_s", t_obj, ""))
-    csv_rows.append(("descplane_64KiB_1B_batch_s", t_bat, ""))
-    csv_rows.append(("descplane_64KiB_1B_speedup", speedup, "target>=10x"))
-    LAST.update({"speedup_64KiB_1B": speedup,
-                 "object_path_64KiB_1B_s": t_obj,
-                 "batch_path_64KiB_1B_s": t_bat})
-    assert speedup >= 10.0, \
-        f"SoA descriptor plane only {speedup:.1f}x faster (need >= 10x)"
+    kib = total // 1024
+    csv_rows.append((f"descplane_{kib}KiB_1B_object_s", t_obj, ""))
+    csv_rows.append((f"descplane_{kib}KiB_1B_batch_s", t_bat, ""))
+    csv_rows.append((f"descplane_{kib}KiB_1B_speedup", speedup,
+                     f"target>={gate:.0f}x"))
+    LAST.update({f"speedup_{kib}KiB_1B": speedup,
+                 f"object_path_{kib}KiB_1B_s": t_obj,
+                 f"batch_path_{kib}KiB_1B_s": t_bat})
+    assert speedup >= gate, \
+        f"SoA descriptor plane only {speedup:.1f}x faster (need >= {gate}x)"
 
-    # 2 — full Fig. 14 sweep wall clock on the batch path
+    # 2 — Fig. 14 sweep wall clock on the batch path
     def sweep():
-        for mem in SWEEP_SYSTEMS:
-            for frag in SWEEP_FRAGS:
-                fragmented_copy(TOTAL, frag, cfg, mem, mem)
+        for mem in sweep_systems:
+            for frag in sweep_frags:
+                fragmented_copy(total, frag, cfg, mem, mem)
     t0 = time.perf_counter()
     sweep()
     t_sweep = time.perf_counter() - t0
-    csv_rows.append(("descplane_fig14_sweep_wall_s", t_sweep, "33 cells"))
+    cells = len(sweep_systems) * len(sweep_frags)
+    csv_rows.append(("descplane_fig14_sweep_wall_s", t_sweep,
+                     f"{cells} cells"))
 
-    # 3 — 1M-descriptor scatter/gather, batch path only
-    batch = scatter_gather_batch()
+    # 3 — bulk scatter/gather, batch path only
+    sg_tag = "1M" if scatter_n == 1_000_000 else "50k"
+    batch = scatter_gather_batch(n=scatter_n)
     t0 = time.perf_counter()
     res = simulate_batch(batch, cfg, SRAM, SRAM)   # legalizes internally
     t_sg = time.perf_counter() - t0
     prof = burst_profile(legalize_batch(batch, bus_width=cfg.bus_width),
                          bus_width=cfg.bus_width)
-    csv_rows.append(("descplane_scatter_gather_1M_s", t_sg, "limit<10s"))
-    csv_rows.append(("descplane_scatter_gather_1M_bursts",
+    csv_rows.append((f"descplane_scatter_gather_{sg_tag}_s", t_sg,
+                     "limit<10s"))
+    csv_rows.append((f"descplane_scatter_gather_{sg_tag}_bursts",
                      prof["n_bursts"], ""))
-    csv_rows.append(("descplane_scatter_gather_1M_shifter_eff",
+    csv_rows.append((f"descplane_scatter_gather_{sg_tag}_shifter_eff",
                      prof["shifter_efficiency"], ""))
     LAST.update({
         "fig14_sweep_wall_s": t_sweep,
-        "scatter_gather_1M_s": t_sg,
-        "scatter_gather_1M_bursts": int(prof["n_bursts"]),
+        f"scatter_gather_{sg_tag}_s": t_sg,
+        f"scatter_gather_{sg_tag}_bursts": int(prof["n_bursts"]),
     })
     assert t_sg < 10.0, \
         f"1M scatter/gather took {t_sg:.1f}s (limit 10s)"

@@ -70,7 +70,8 @@ def _next_snapshot_index(root: str = _REPO_ROOT) -> int:
     return best + 1
 
 
-def write_snapshot(suite_metrics, wall, errors, index=None) -> str:
+def write_snapshot(suite_metrics, wall, errors, index=None,
+                   skipped=None) -> str:
     """Write the numbered perf-trajectory snapshot (suite → metrics)."""
     if index is None:
         index = _next_snapshot_index()
@@ -79,6 +80,7 @@ def write_snapshot(suite_metrics, wall, errors, index=None) -> str:
         "index": index,
         "suite_wall_clock_s": wall,
         **({"suite_errors": errors} if errors else {}),
+        **({"suite_skipped": skipped} if skipped else {}),
     }
     path = os.path.join(_REPO_ROOT, f"BENCH_{index}.json")
     with open(path, "w") as f:
@@ -99,6 +101,10 @@ def main() -> None:
     ap.add_argument("--engine", default=None, metavar="PRESET",
                     help="sweep a named EngineSpec preset (repro.core.spec"
                          ".PRESETS) in the suites that support it")
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink the heavyweight suites (dataplane, "
+                         "descriptor plane) to smoke-test sizes with "
+                         "relaxed gates; implies --no-snapshot")
     args = ap.parse_args()
 
     if args.engine is not None:
@@ -110,23 +116,37 @@ def main() -> None:
     rows = []
     wall = {}
     errors = {}
+    skipped = {}
     for name, what in SUITES:
         if args.only and args.only != name:
             continue
         print(f"# suite: {name} ({what})", file=sys.stderr)
         t0 = time.perf_counter()
+        n_rows_before = len(rows)
         try:
             mod = importlib.import_module(_MODULES[name])
-            # suites opt into preset sweeps by taking an `engine` kwarg
-            if args.engine is not None and \
-                    "engine" in inspect.signature(mod.run).parameters:
-                mod.run(rows, engine=args.engine)
-            else:
-                mod.run(rows)
+            # suites opt into preset sweeps / quick mode by kwarg
+            params = inspect.signature(mod.run).parameters
+            kwargs = {}
+            if args.engine is not None and "engine" in params:
+                kwargs["engine"] = args.engine
+            if args.quick and "quick" in params:
+                kwargs["quick"] = True
+            mod.run(rows, **kwargs)
             wall[name] = time.perf_counter() - t0
+        except ModuleNotFoundError as err:
+            # a missing *optional* dependency (jax on a CPU box,
+            # repro.dist before the distributed layer lands) is not a
+            # broken suite: record the skip, keep the exit code green
+            if args.only:
+                raise
+            skipped[name] = f"missing dependency: {err.name}"
+            del rows[n_rows_before:]   # skipped means *no* partial rows
+            print(f"# suite {name} SKIPPED ({skipped[name]})",
+                  file=sys.stderr)
         except Exception as err:
-            # a broken/optional-dependency suite must not discard the
-            # rows and timings every suite before it already measured
+            # a broken suite must not discard the rows and timings every
+            # suite before it already measured
             if args.only:
                 raise
             errors[name] = f"{type(err).__name__}: {err}"
@@ -141,6 +161,8 @@ def main() -> None:
         payload = {"suite_wall_clock_s": wall}
         if errors:
             payload["suite_errors"] = errors
+        if skipped:
+            payload["suite_skipped"] = skipped
         # persist any suite's module-level LAST dict (partial data survives
         # a failed gate; import-time failures are already in suite_errors)
         suite_metrics = {}
@@ -157,12 +179,12 @@ def main() -> None:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
         # numbered trajectory snapshots only make sense for full runs —
-        # a partial --only run would mint an index whose metrics are not
-        # comparable to the committed full-run snapshots
-        if not args.no_snapshot and \
+        # a partial --only or shrunk --quick run would mint an index whose
+        # metrics are not comparable to the committed full-run snapshots
+        if not args.no_snapshot and not args.quick and \
                 (args.only is None or args.snapshot is not None):
             snap = write_snapshot(suite_metrics, wall, errors,
-                                  index=args.snapshot)
+                                  index=args.snapshot, skipped=skipped)
             print(f"# wrote {snap}", file=sys.stderr)
 
     if errors:

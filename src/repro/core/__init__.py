@@ -18,11 +18,12 @@ from .midend import (coalesce_nd, iter_tensor_nd, mp_dist, mp_dist_batch,
                      mp_dist_tree, mp_split, mp_split_batch, rt_schedule,
                      split_and_distribute, tensor_2d, tensor_nd,
                      tensor_nd_batch)
-from .frontend import (FRONTENDS, DescFrontend, InstFrontend, RegFrontend,
+from .frontend import (FRONTENDS, CompletionEvent, DescFrontend,
+                       InstFrontend, IrqController, IrqStats, RegFrontend,
                        make_frontend, write_chain)
-from .backend import (ExecHints, MemoryMap, TransferError, build_exec_hints,
-                      execute, execute_batch, init_stream, splitmix32,
-                      splitmix64)
+from .backend import (ExecHints, FaultInjector, FaultSite, MemoryMap,
+                      TransferError, build_exec_hints, execute,
+                      execute_batch, init_stream, splitmix32, splitmix64)
 from .plan import (PlanCache, PlanCacheStats, TransferPlan, capture_nd_plan,
                    capture_plan, nd_plan_signature, plan_signature,
                    simulate_plan, structure_modulus)
@@ -37,10 +38,11 @@ from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, ChannelSimResult,
                         simulate_reference, utilization_sweep,
                         xilinx_baseline_config)
 from .spec import (PRESETS, VMEM_ENDPOINT, BackendSpec, ChannelSpec,
-                   CustomStage, EngineSpec, FrontendSpec, MidendStage,
-                   MpDistStage, MpSplitStage, RtReplicateStage,
-                   build_engine, build_frontend, cheshire, edge_ai,
-                   manticore, preset, pulp_cluster, spec_of)
+                   CustomStage, EngineSpec, FrontendSpec, IrqSpec,
+                   MidendStage, MpDistStage, MpSplitStage,
+                   RtReplicateStage, build_engine, build_frontend,
+                   cheshire, edge_ai, manticore, preset, pulp_cluster,
+                   spec_of)
 from . import analytics, instream
 
 __all__ = [
@@ -53,10 +55,12 @@ __all__ = [
     "coalesce_nd", "iter_tensor_nd", "mp_dist", "mp_dist_batch",
     "mp_dist_tree", "mp_split", "mp_split_batch", "rt_schedule",
     "split_and_distribute", "tensor_2d", "tensor_nd", "tensor_nd_batch",
-    "DescFrontend", "FRONTENDS", "InstFrontend", "RegFrontend",
-    "make_frontend", "write_chain",
-    "ExecHints", "MemoryMap", "TransferError", "build_exec_hints",
-    "execute", "execute_batch", "init_stream", "splitmix32", "splitmix64",
+    "CompletionEvent", "DescFrontend", "FRONTENDS", "InstFrontend",
+    "IrqController", "IrqStats", "RegFrontend", "make_frontend",
+    "write_chain",
+    "ExecHints", "FaultInjector", "FaultSite", "MemoryMap",
+    "TransferError", "build_exec_hints", "execute", "execute_batch",
+    "init_stream", "splitmix32", "splitmix64",
     "PlanCache", "PlanCacheStats", "TransferPlan", "capture_nd_plan",
     "capture_plan", "nd_plan_signature", "plan_signature", "simulate_plan",
     "structure_modulus",
@@ -69,8 +73,9 @@ __all__ = [
     "simulate", "simulate_batch", "simulate_channels",
     "simulate_reference", "utilization_sweep", "xilinx_baseline_config",
     "BackendSpec", "ChannelSpec", "CustomStage", "EngineSpec",
-    "FrontendSpec", "MidendStage", "MpDistStage", "MpSplitStage",
-    "PRESETS", "RtReplicateStage", "VMEM_ENDPOINT", "build_engine",
+    "FrontendSpec", "IrqSpec", "MidendStage", "MpDistStage",
+    "MpSplitStage", "PRESETS", "RtReplicateStage", "VMEM_ENDPOINT",
+    "build_engine",
     "build_frontend", "cheshire", "edge_ai", "manticore", "preset",
     "pulp_cluster", "spec_of",
     "analytics", "instream",

@@ -15,7 +15,7 @@ against the same oracle.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -139,6 +139,86 @@ class TransferError(Exception):
                 f"src={self.burst.src_addr:#x} "
                 f"dst={self.burst.dst_addr:#x} len={self.burst.length}: "
                 f"{self.reason}")
+
+
+@dataclass
+class FaultSite:
+    """One deterministic seeded fault site for the verification exerciser.
+
+    ``index`` is a *drain-global* burst ordinal: the engine numbers the
+    bursts of one drain (`wait_all` / `run_functional`) consecutively
+    across every lowered port, so a site names one physical burst slot
+    regardless of how the error handler re-issues around it.
+
+    Kinds:
+      * ``"transient"`` — the burst fails ``hits`` times, then succeeds
+        (a transient read error: the replay verb recovers when
+        ``max_replays >= hits``);
+      * ``"persistent"`` — the burst fails on every attempt (a hard
+        bounds-style fault: drives replay exhaustion / abort / continue);
+      * ``"stall"``      — the burst does not fail but the channel stalls
+        for ``stall_cycles`` (surfaced with the replay backoff on
+        `ChannelSimResult.backoff_cycles`).
+    """
+
+    index: int
+    kind: str = "transient"       # "transient" | "persistent" | "stall"
+    hits: int = 1
+    stall_cycles: int = 0
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("transient", "persistent", "stall"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.index < 0:
+            raise ValueError("fault index must be >= 0")
+        if self.kind == "transient" and self.hits < 1:
+            raise ValueError("transient faults need hits >= 1")
+        if self.kind == "stall" and self.stall_cycles < 1:
+            raise ValueError("stall faults need stall_cycles >= 1")
+
+
+class FaultInjector:
+    """Deterministic fault-site store consulted by the engine's drain loop
+    (and mirrored by the exerciser's scalar oracle: two instances built
+    from the same site list fire identically on both paths).
+
+    `next_fault(lo, hi)` returns the drain-global index of the first
+    armed fault site in ``[lo, hi)`` and consumes one hit from it;
+    `take_stalls(lo, hi)` consumes and sums the stall cycles of stall
+    sites in the range.  Exhausted transient sites stop firing.
+    """
+
+    def __init__(self, sites: Sequence[FaultSite] = ()) -> None:
+        self.sites = sorted((FaultSite(s.index, s.kind, s.hits,
+                                       s.stall_cycles) for s in sites),
+                            key=lambda s: s.index)
+        self.fired = 0
+        self.stalled_cycles = 0
+
+    def next_fault(self, lo: int, hi: int) -> Optional[int]:
+        for s in self.sites:
+            if s.index >= hi:
+                break
+            if s.index < lo or s.kind == "stall":
+                continue
+            if s.kind == "transient" and s.hits <= 0:
+                continue
+            if s.kind == "transient":
+                s.hits -= 1
+            self.fired += 1
+            return s.index
+        return None
+
+    def take_stalls(self, lo: int, hi: int) -> int:
+        cycles = 0
+        for s in self.sites:
+            if s.index >= hi:
+                break
+            if s.kind == "stall" and lo <= s.index and s.stall_cycles:
+                cycles += s.stall_cycles
+                s.stall_cycles = 0
+        self.stalled_cycles += cycles
+        return cycles
 
 
 class ReadManager:
@@ -535,7 +615,10 @@ def execute_batch(batch: DescriptorBatch, mem: MemoryMap,
                   fail_at: Optional[int] = None,
                   stream_base: Optional[Dict[int, int]] = None,
                   check: bool = True,
-                  hints: Optional[ExecHints] = None) -> int:
+                  hints: Optional[ExecHints] = None,
+                  fault_hook: Optional[
+                      Callable[[DescriptorBatch], Optional[int]]] = None
+                  ) -> int:
     """Vectorized functional back-end: run a legalized `DescriptorBatch`
     against `mem`; returns bytes moved.  The batched sibling of `execute`
     (which remains the scalar oracle) — property tests assert the two are
@@ -566,10 +649,20 @@ def execute_batch(batch: DescriptorBatch, mem: MemoryMap,
     `hints` — precomputed `ExecHints` for exactly this batch structure (a
     captured plan's grouping); ignored when a fault truncates the batch or
     an in-stream accelerator forces the ragged path.
+
+    `fault_hook` — the verification exerciser's fault-injection hook:
+    called with the (possibly already truncated-by-`done`) batch before
+    the bounds scan, it may return a row index to fault exactly as
+    `fail_at` would (deterministic seeded sites: see `FaultInjector`).
+    Both may be given; the earlier row wins.
     """
     n = len(batch)
     if n == 0:
         return 0
+    if fault_hook is not None:
+        hooked = fault_hook(batch)
+        if hooked is not None and (fail_at is None or hooked < fail_at):
+            fail_at = hooked
     if check:
         check_legal_batch(batch, bus_width=bus_width)
     src_gen = hints.src_gen if hints is not None \

@@ -34,9 +34,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from . import simulator as sim
-from .backend import ExecHints, MemoryMap, TransferError, execute_batch
+from .backend import (ExecHints, FaultInjector, MemoryMap, TransferError,
+                      execute_batch)
 from .descriptor import (DescriptorBatch, NdTransfer, Transfer1D,
                          concat_batches)
+from .frontend import CompletionEvent, IrqController
 from .legalizer import legalize_batch, legalize_tile
 from .midend import mp_dist_batch, mp_split_batch, tensor_nd_batch
 from .plan import PlanCache
@@ -64,15 +66,22 @@ class ErrorPolicy:
     reports the legalized burst base address, and the PEs choose one of
     continue / abort / replay.
 
-    The verb is validated eagerly at construction — a typo must fail the
-    instantiation, not surface as undefined behaviour deep inside the
-    drain loop of the first failing transfer."""
+    ``replay_backoff`` models the retry penalty of a real error handler
+    (re-arbitrating the port, re-fetching the burst): every replay adds
+    this many cycles to the drain's timing, surfaced on
+    `ChannelSimResult.backoff_cycles` (and folded into
+    ``total_cycles``) — the functional byte movement is unaffected.
+
+    Every field is validated eagerly at construction — a typo must fail
+    the instantiation, not surface as undefined behaviour deep inside
+    the drain loop of the first failing transfer."""
 
     #: the paper's three error-handler verbs (§2.3)
     VERBS = ("continue", "abort", "replay")
 
     action: str = "replay"        # "continue" | "abort" | "replay"
     max_replays: int = 3
+    replay_backoff: int = 0       # cycles added per replayed burst
 
     def __post_init__(self) -> None:
         if self.action not in self.VERBS:
@@ -82,6 +91,9 @@ class ErrorPolicy:
         if self.max_replays < 0:
             raise ValueError(
                 f"max_replays must be >= 0, got {self.max_replays}")
+        if self.replay_backoff < 0:
+            raise ValueError(
+                f"replay_backoff must be >= 0, got {self.replay_backoff}")
 
 
 @dataclass
@@ -92,6 +104,9 @@ class EngineStats:
     bursts: int = 0
     errors: int = 0
     replays: int = 0
+    #: error-handler retry/stall penalty cycles accumulated across drains
+    #: (`ErrorPolicy.replay_backoff` per replay, plus injected stalls)
+    backoff_cycles: int = 0
     #: submissions that could not be served by a configured plan cache
     #: (multi-back-end split, or an unsigned custom pipeline stage) —
     #: a silently-bypassing engine now shows up in its own stats
@@ -151,6 +166,7 @@ class IDMAEngine:
         channel_boundary: int = 0,
         plan_cache: Optional[PlanCache] = None,
         pipeline: Sequence[object] = (),
+        irq: Optional[object] = None,
     ) -> None:
         if num_backends > 1 and backend_boundary <= 0:
             raise ValueError("multi-back-end engines need backend_boundary")
@@ -216,6 +232,25 @@ class IDMAEngine:
         self._rr = 0                                 # round-robin cursor
         #: timing result of the last `wait_all` drain
         self.last_channel_result: Optional[sim.ChannelSimResult] = None
+        #: completion-interrupt front-end (MSI-X style): `wait_all` marks
+        #: records by *delivering* completion events through this
+        #: controller in `simulate_channels` event order; `poll` stays as
+        #: the register-read adapter over the records it marks.  `irq` is
+        #: a `core.spec.IrqSpec` (duck-typed here to avoid the circular
+        #: spec import) or None for immediate per-event delivery.
+        self.irq_spec = irq
+        vectors = getattr(irq, "vectors", 0) or num_channels
+        self.irq = IrqController(
+            num_vectors=vectors,
+            coalesce_count=getattr(irq, "coalesce_count", 1),
+            coalesce_cycles=getattr(irq, "coalesce_cycles", 0))
+        self.irq.register(self._irq_complete)
+        #: verification fault-injection hook (`backend.FaultInjector`):
+        #: seeded deterministic fault sites consulted by the drain loop,
+        #: indexed by drain-global burst ordinal
+        self.fault_injector: Optional[FaultInjector] = None
+        self._burst_cursor = 0       # drain-global burst ordinal
+        self._drain_backoff = 0      # replay/stall penalty of this drain
 
     @property
     def spec(self) -> "EngineSpec":
@@ -306,7 +341,17 @@ class IDMAEngine:
         """Drain every channel queue: run the timing fabric over the
         concurrent per-channel streams (`simulate_channels`, shared
         `src_system`/`dst_system` endpoints), then execute the functional
-        fabric and mark completion records.
+        fabric and *deliver* the completions.
+
+        Completion is interrupt-driven: each drained submission posts a
+        `CompletionEvent` carrying its last write-end cycle from the
+        timing result, events are posted to the engine's `IrqController`
+        in `simulate_channels` event order (cycle, then tid), the
+        controller coalesces them per `IrqSpec` and fires the registered
+        callbacks (`on_complete`), and the engine's own handler marks the
+        completion records the `poll` adapter reads.  Coalescing batches
+        delivery only — cycles, bytes and record outcomes are identical
+        under any `IrqSpec` (property-tested).
 
         Functional drain order: queue items (single descriptors, or one
         shard of a `dispatch_batch`) ordered by first transfer id, each
@@ -316,9 +361,12 @@ class IDMAEngine:
         transfers to different channels and rely on their order.
 
         Returns the multi-channel timing result (also kept on
-        `last_channel_result`).  On a `TransferError` with the "abort"
-        policy, the failing submission's record flips to ``"error"``,
-        undrained items stay queued, and the error propagates.
+        `last_channel_result`), with the error handler's accumulated
+        replay backoff / injected stalls on ``backoff_cycles``.  On a
+        `TransferError` with the "abort" policy, the failing submission's
+        record flips to ``"error"``, its error event (and every completion
+        before it) is delivered, undrained items stay queued, and the
+        error propagates.
         """
         items = sorted((it for q in self._queues for it in q),
                        key=lambda it: it[0])
@@ -334,14 +382,20 @@ class IDMAEngine:
         # Plan-lowered payloads carry precomputed beat counts, which feed
         # the channel model whenever a whole channel stream has them.
         lowered: Dict[int, List[LoweredPort]] = {}
+        spans: Dict[int, List[Tuple[int, int, int]]] = {}
         streams = []
         stream_beats = []
         beats_ok = self.sim_config.bus_width == self.bus_width
-        for q in self._queues:
+        for c, q in enumerate(self._queues):
             parts: List[LoweredPort] = []
+            off = 0
             for tid0, _, payload in q:
                 lps = self._lower_ports(payload)
                 lowered[tid0] = lps
+                count = sum(len(lp.batch) for lp in lps)
+                if count:       # burst span in channel c's stream
+                    spans.setdefault(tid0, []).append((c, off, count))
+                    off += count
                 parts.extend(lps)
             nonempty = [lp for lp in parts if len(lp.batch)]
             streams.append(concat_batches([lp.batch for lp in nonempty]))
@@ -357,36 +411,89 @@ class IDMAEngine:
             already_legal=True, beats=stream_beats)
         self.last_channel_result = result
 
+        def span_cycle(tid0: int) -> int:
+            """Completion cycle of one queue item: the last write-end of
+            its burst span(s) in the channel streams."""
+            cyc = 0
+            for c, lo, cnt in spans.get(tid0, ()):
+                wend = result.burst_wend[c]
+                cyc = max(cyc, max(wend[lo:lo + cnt]))
+            return cyc
+
         # -- functional fabric: drain in submission (tid) order -----------
         for q in self._queues:
             q.clear()
-        for k, (tid0, channel, payload) in enumerate(items):
-            rec = self._record_for(tid0)
-            before = self.stats.bytes_moved
-            try:
-                self._run_ports(lowered[tid0])
-                if isinstance(payload, DescriptorBatch):
-                    count = len(payload)
-                    last = int(payload.transfer_id[-1])
-                else:
-                    count = 1
-                    last = tid0
-            except TransferError:
+        self._burst_cursor = 0
+        self._drain_backoff = 0
+        events: List[CompletionEvent] = []
+        rec_cycle: Dict[int, int] = {}
+        try:
+            for k, (tid0, channel, payload) in enumerate(items):
+                rec = self._record_for(tid0)
+                before = self.stats.bytes_moved
+                try:
+                    self._run_ports(lowered[tid0])
+                    if isinstance(payload, DescriptorBatch):
+                        count = len(payload)
+                        last = int(payload.transfer_id[-1])
+                    else:
+                        count = 1
+                        last = tid0
+                except TransferError:
+                    if rec is not None:
+                        first = rec.status != "error"
+                        rec.status = "error"     # terminal
+                        rec.pending -= 1
+                        rec.bytes_moved += self.stats.bytes_moved - before
+                        cyc = max(rec_cycle.get(rec.tid, 0),
+                                  span_cycle(tid0))
+                        if first:   # one interrupt per record: a later
+                            # shard of an already-errored dispatch must
+                            # not re-raise the vector
+                            events.append(CompletionEvent(
+                                tid=rec.tid, count=rec.count,
+                                channel=rec.channel, cycle=cyc,
+                                status="error", bytes_moved=rec.bytes_moved))
+                    for it in items[k + 1:]:    # failed item is consumed
+                        self._queues[it[1]].append(it)
+                    raise
                 if rec is not None:
-                    rec.status = "error"     # terminal
                     rec.pending -= 1
                     rec.bytes_moved += self.stats.bytes_moved - before
-                for it in items[k + 1:]:    # failed item is consumed
-                    self._queues[it[1]].append(it)
-                raise
-            if rec is not None:
-                rec.pending -= 1
-                rec.bytes_moved += self.stats.bytes_moved - before
-                if rec.pending <= 0 and rec.status != "error":
-                    rec.status = "done"
-            self.stats.completed += count
-            self._last_completed = last
+                    cyc = max(rec_cycle.get(rec.tid, 0), span_cycle(tid0))
+                    rec_cycle[rec.tid] = cyc
+                    if rec.pending <= 0 and rec.status != "error":
+                        events.append(CompletionEvent(
+                            tid=rec.tid, count=rec.count,
+                            channel=rec.channel, cycle=cyc, status="done",
+                            bytes_moved=rec.bytes_moved))
+                self.stats.completed += count
+                self._last_completed = last
+        finally:
+            # interrupt delivery — also on the abort path, so the error
+            # event and every completion before it reach the callbacks
+            result.backoff_cycles = self._drain_backoff
+            self.stats.backoff_cycles += self._drain_backoff
+            for ev in sorted(events, key=lambda e: (e.cycle, e.tid)):
+                self.irq.post(ev)
+            self.irq.flush()
         return result
+
+    def on_complete(self, callback) -> None:
+        """Register a completion-interrupt handler: ``callback(vector,
+        events)`` is invoked by `wait_all`'s drain with coalesced
+        `CompletionEvent` batches in completion order (`IrqSpec`
+        thresholds decide the batching)."""
+        self.irq.register(callback)
+
+    def _irq_complete(self, vector: int, events) -> None:
+        """The engine's own interrupt handler: flip delivered records to
+        their terminal state (the `poll` adapter reads these)."""
+        for ev in events:
+            rec = self._record_for(ev.tid)
+            if rec is not None and ev.status == "done" \
+                    and rec.status != "error":
+                rec.status = "done"
 
     def _add_record(self, rec: CompletionRecord) -> None:
         self._records.append(rec)
@@ -518,7 +625,10 @@ class IDMAEngine:
 
     def _run(self, transfer: Union[Descriptor, DescriptorBatch]) -> None:
         """Functional execution of one descriptor/batch (adapter over
-        `_lower_ports` + `_run_ports` for callers outside `wait_all`)."""
+        `_lower_ports` + `_run_ports` for callers outside `wait_all`).
+        Fault-injection ordinals restart at 0 per call (each call is its
+        own one-item drain)."""
+        self._burst_cursor = 0
         self._run_ports(self._lower_ports(transfer))
 
     def _stuck_state(self) -> str:
@@ -545,10 +655,15 @@ class IDMAEngine:
         channel/queue state instead of spinning forever."""
         if self.mem is None:
             return
+        inj = self.fault_injector
         for lp in ports:
             port = lp.batch
             n = len(port)
+            base = self._burst_cursor   # drain-global ordinal of burst 0
+            self._burst_cursor += n
             self.stats.bursts += n
+            if inj is not None and n:
+                self._drain_backoff += inj.take_stalls(base, base + n)
             done = 0
             replays = 0
             no_progress = 0
@@ -559,6 +674,12 @@ class IDMAEngine:
                 if self._fail_at is not None and \
                         done <= self._fail_at < n:
                     fail = self._fail_at - done
+                if inj is not None:
+                    hit = inj.next_fault(base + done, base + n)
+                    if hit is not None:
+                        rel = hit - base - done
+                        if fail is None or rel < fail:
+                            fail = rel
                 pending = port.select(np.s_[done:]) if done else port
                 try:
                     moved = execute_batch(
@@ -585,6 +706,8 @@ class IDMAEngine:
                         if replays > self.error_policy.max_replays:
                             raise
                         self._fail_at = None    # fault cleared on replay
+                        self._drain_backoff += \
+                            self.error_policy.replay_backoff
                         done = idx              # re-issue the same burst
                 if done <= before_done:
                     no_progress += 1

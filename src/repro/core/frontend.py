@@ -331,6 +331,102 @@ class InstFrontend:
         return tid, self._issued - before
 
 
+# ---------------------------------------------------------------------------
+# Completion-interrupt front-end (MSI-X style)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CompletionEvent:
+    """One completion posted by the engine's drain, in `simulate_channels`
+    event order: ``cycle`` is the submission's last write-end cycle in the
+    drain's timing result (ties broken by ``tid``).  ``status`` is the
+    completion record's terminal state; ``count`` the number of transfer
+    ids the record covers."""
+
+    tid: int
+    count: int
+    channel: int
+    cycle: int
+    status: str                   # "done" | "error"
+    bytes_moved: int
+
+
+@dataclass
+class IrqStats:
+    posted: int = 0               # completion events posted
+    delivered: int = 0            # events handed to callbacks
+    fired: int = 0                # interrupts raised (coalesced batches)
+    flushed: int = 0              # end-of-drain timeout kicks
+
+
+class IrqController:
+    """MSI-X-style completion-interrupt controller.
+
+    Channels post `CompletionEvent`s to interrupt vectors (channel →
+    ``channel % num_vectors``; sharded records post on vector 0) and the
+    controller *coalesces* them: a vector fires once ``coalesce_count``
+    events are pending, or — with a nonzero ``coalesce_cycles`` — once
+    the newest pending event is that many cycles younger than the oldest.
+    `flush` raises the end-of-drain timeout interrupt for whatever is
+    still pending, so no completion is ever lost.
+
+    Callbacks (`register`) receive ``(vector, events)`` with the events
+    of one interrupt in posting (completion) order.  Delivery is purely
+    observational: it never changes engine timing or byte movement.
+    """
+
+    def __init__(self, num_vectors: int = 1, coalesce_count: int = 1,
+                 coalesce_cycles: int = 0) -> None:
+        if num_vectors < 1:
+            raise ValueError("irq controller needs num_vectors >= 1")
+        if coalesce_count < 1:
+            raise ValueError("irq coalesce_count must be >= 1")
+        if coalesce_cycles < 0:
+            raise ValueError("irq coalesce_cycles must be >= 0")
+        self.num_vectors = num_vectors
+        self.coalesce_count = coalesce_count
+        self.coalesce_cycles = coalesce_cycles
+        self.pending: List[List[CompletionEvent]] = [
+            [] for _ in range(num_vectors)]
+        self.callbacks: List = []
+        self.stats = IrqStats()
+
+    def register(self, callback) -> None:
+        """Register a ``callback(vector, events)`` completion handler."""
+        self.callbacks.append(callback)
+
+    def vector_of(self, channel: int) -> int:
+        return channel % self.num_vectors if channel >= 0 else 0
+
+    def post(self, event: CompletionEvent) -> None:
+        """Post one completion; fires the vector when a coalescing
+        threshold is crossed."""
+        v = self.vector_of(event.channel)
+        pend = self.pending[v]
+        pend.append(event)
+        self.stats.posted += 1
+        if len(pend) >= self.coalesce_count or (
+                self.coalesce_cycles > 0
+                and event.cycle - pend[0].cycle >= self.coalesce_cycles):
+            self._fire(v)
+
+    def flush(self) -> None:
+        """End-of-drain timeout kick: fire every vector still pending."""
+        for v in range(self.num_vectors):
+            if self.pending[v]:
+                self.stats.flushed += 1
+                self._fire(v)
+
+    def _fire(self, v: int) -> None:
+        events, self.pending[v] = self.pending[v], []
+        if not events:
+            return
+        self.stats.fired += 1
+        self.stats.delivered += len(events)
+        for cb in self.callbacks:
+            cb(v, events)
+
+
 class IDMAEngineLike:
     """Protocol for engines a front-end can drive (see core.engine)."""
 

@@ -437,10 +437,25 @@ class ChannelSimResult:
     `cycles` is the cycle its last write beat lands, measured from the
     common start).  `aggregate` merges them: makespan cycles, summed
     bytes/beats/bursts, earliest first read request.
+
+    `burst_wend[c]` is channel c's per-burst write-end cycle in stream
+    order — the completion event times the interrupt front-end delivers
+    callbacks in (`IrqController`).  `backoff_cycles` is the error
+    handler's retry/stall penalty accumulated by the drain that produced
+    this result (`ErrorPolicy.replay_backoff` per replay, plus injected
+    channel stalls); it is kept outside the transport recurrences and
+    folded in by `total_cycles`.
     """
 
     per_channel: List[SimResult]
     aggregate: SimResult
+    backoff_cycles: int = 0
+    burst_wend: Optional[List[List[int]]] = None
+
+    @property
+    def total_cycles(self) -> int:
+        """Makespan including the error handler's backoff/stall penalty."""
+        return self.aggregate.cycles + self.backoff_cycles
 
     @property
     def aggregate_bandwidth(self) -> float:
@@ -716,7 +731,8 @@ def simulate_channels(
         ).with_width(cfgs[0].bus_width)
     else:
         agg = SimResult(0, 0, 0, 0, 0)
-    return ChannelSimResult(per_channel=per, aggregate=agg)
+    return ChannelSimResult(per_channel=per, aggregate=agg,
+                            burst_wend=[ch.wend_hist for ch in channels])
 
 
 # --------------------------------------------------------------------------

@@ -57,7 +57,7 @@ from .simulator import (HBM, PULP_L2, PULP_TCDM, RPC_DRAM, SRAM,
 __all__ = [
     "MidendStage", "MpSplitStage", "MpDistStage", "RtReplicateStage",
     "CustomStage", "FrontendSpec", "BackendSpec", "ChannelSpec",
-    "EngineSpec", "build_engine", "build_frontend", "spec_of",
+    "IrqSpec", "EngineSpec", "build_engine", "build_frontend", "spec_of",
     "pulp_cluster", "manticore", "cheshire", "edge_ai", "PRESETS",
     "preset", "VMEM_ENDPOINT",
 ]
@@ -343,7 +343,41 @@ class BackendSpec:
     def signature(self) -> Hashable:
         return ("backend", self.num_ports, self.boundary, self.bus_width,
                 tuple(self.protocols), self.error_policy.action,
-                self.error_policy.max_replays)
+                self.error_policy.max_replays,
+                self.error_policy.replay_backoff)
+
+
+@dataclass(frozen=True)
+class IrqSpec:
+    """Completion-interrupt shape (MSI-X style, `core.frontend
+    .IrqController`).
+
+    Per-channel completion events are posted to ``vectors`` interrupt
+    vectors (``0`` → one vector per channel) and *coalesced*: a vector
+    fires once ``coalesce_count`` events are pending, or once the oldest
+    pending event is ``coalesce_cycles`` engine cycles older than the
+    newest (``0`` disables the cycle threshold).  Whatever is still
+    pending when a drain completes is flushed — the timeout kick of a
+    real interrupt controller — so no completion is ever lost to
+    coalescing.  Delivery never changes timing or byte movement; it only
+    batches the callbacks.
+    """
+
+    coalesce_count: int = 1
+    coalesce_cycles: int = 0
+    vectors: int = 0              # 0: one vector per channel
+
+    def __post_init__(self) -> None:
+        if self.coalesce_count < 1:
+            raise ValueError("irq coalesce_count must be >= 1")
+        if self.coalesce_cycles < 0:
+            raise ValueError("irq coalesce_cycles must be >= 0")
+        if self.vectors < 0:
+            raise ValueError("irq vectors must be >= 0")
+
+    def signature(self) -> Hashable:
+        return ("irq", self.coalesce_count, self.coalesce_cycles,
+                self.vectors)
 
 
 @dataclass(frozen=True)
@@ -387,6 +421,7 @@ class EngineSpec:
     midend: Tuple[MidendStage, ...] = ()
     backend: BackendSpec = field(default_factory=BackendSpec)
     channels: ChannelSpec = field(default_factory=ChannelSpec)
+    irq: IrqSpec = field(default_factory=IrqSpec)
     sim_config: Optional[EngineConfig] = None
     src_system: MemSystem = SRAM
     dst_system: MemSystem = SRAM
@@ -439,6 +474,7 @@ class EngineSpec:
             "engine_spec", self.name, self.frontend,
             tuple(st.signature() for st in self.midend),
             self.backend.signature(), self.channels.signature(),
+            self.irq.signature(),
             self.effective_sim_config, self.src_system, self.dst_system,
         )
 
@@ -485,6 +521,7 @@ def build_engine(spec: EngineSpec,
         channel_scheme=spec.channels.scheme,
         channel_boundary=spec.channels.boundary,
         plan_cache=cache,
+        irq=spec.irq,
     )
     eng._spec = spec
     return eng
@@ -533,6 +570,8 @@ def spec_of(engine: IDMAEngine) -> EngineSpec:
         channels=ChannelSpec(count=engine.num_channels,
                              scheme=engine.channel_scheme,
                              boundary=engine.channel_boundary),
+        irq=engine.irq_spec if isinstance(engine.irq_spec, IrqSpec)
+        else IrqSpec(),
         sim_config=engine.sim_config,
         src_system=engine.src_system,
         dst_system=engine.dst_system,

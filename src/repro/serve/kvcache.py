@@ -35,9 +35,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DescriptorBatch, EngineSpec, IDMAEngine, MemoryMap,
-                        PlanCache, Protocol, build_engine, concat_batches,
-                        edge_ai, execute_batch, legalize_batch)
+from repro.core import (CompletionEvent, DescriptorBatch, EngineSpec,
+                        IDMAEngine, MemoryMap, PlanCache, Protocol,
+                        build_engine, concat_batches, edge_ai,
+                        execute_batch, legalize_batch)
 
 
 @dataclass
@@ -246,9 +247,11 @@ class PagedKVDMA:
                  engine: Optional[IDMAEngine] = None,
                  num_channels: int = 1, timing: bool = True,
                  plan_cache: Union[bool, PlanCache] = True,
-                 spec: Optional[EngineSpec] = None) -> None:
+                 spec: Optional[EngineSpec] = None,
+                 on_complete=None) -> None:
         self.layout = layout
         self.timing = timing
+        self._notify = on_complete is not None
         if plan_cache is True:
             plan_cache = PlanCache(capacity=128)
         elif plan_cache is False:
@@ -302,6 +305,13 @@ class PagedKVDMA:
                         f"needs {arr.size} B")
         self.engine = engine
         self.mem = engine.mem
+        # completion notification (the event-driven serve scheduler's
+        # hook): on the timing path the engine's interrupt controller
+        # delivers real `CompletionEvent`s from the `wait_all` drain; the
+        # functional fast path posts synthetic ones per append/gather
+        # (cycle 0, no tids) so the callback contract holds either way
+        if on_complete is not None:
+            engine.on_complete(on_complete)
 
     @classmethod
     def from_spec(cls, spec: EngineSpec, layout: KVLayout, max_batch: int,
@@ -382,6 +392,7 @@ class PagedKVDMA:
         eng.stats.completed += len(desc)
         eng.stats.bursts += len(legal)
         eng.stats.bytes_moved += moved
+        self._post_functional(len(desc), moved)
         return []
 
     def _template(self, site: str, n_rows: int):
@@ -433,7 +444,20 @@ class PagedKVDMA:
         eng.stats.completed += plan.n_desc
         eng.stats.bursts += plan.n_bursts
         eng.stats.bytes_moved += moved
+        self._post_functional(plan.n_desc, moved)
         return []
+
+    def _post_functional(self, count: int, moved: int) -> None:
+        """Functional-path completion notification: one synthetic event
+        per append/gather through the engine's interrupt controller (no
+        transfer ids or cycles exist on this path), immediately flushed —
+        the fast path has no drain boundary to coalesce towards."""
+        if not self._notify:
+            return
+        self.engine.irq.post(CompletionEvent(
+            tid=-1, count=count, channel=-1, cycle=0, status="done",
+            bytes_moved=moved))
+        self.engine.irq.flush()
 
     def append(self, page_table: np.ndarray, pos: int,
                k: np.ndarray, v: np.ndarray) -> List[int]:

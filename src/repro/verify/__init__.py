@@ -1,0 +1,34 @@
+"""repro.verify — constrained-random differential exerciser.
+
+The verification layer of this repo's iDMA reproduction: a seeded
+constrained-random descriptor-program generator (`generator`), a
+differential harness that runs every generated program through the
+engine's vectorized batch path — ``execute_batch`` / ``simulate_channels``,
+plan cache on *and* off, interrupt front-end reconfigured — against an
+independent scalar oracle built on ``execute`` and ``simulate_reference``
+(`harness`), and an automatic shrinker that reduces any diverging program
+to a minimal reproducer (`shrink`).
+
+Programs exercise the paper's §2.3 error-handler verbs end to end via
+deterministic seeded fault injection (`core.backend.FaultSite`): transient
+read errors recovered by replay, persistent faults driving
+replay-exhaustion / abort / continue, and mid-transfer channel stalls
+surfaced as backoff cycles.
+
+Run it:
+
+    python -m repro.verify --seeds 200
+"""
+
+from .generator import (FAMILIES, Program, Row, Submission,
+                        generate_program, fill_mem)
+from .harness import (Divergence, EngineRun, check_program, run_engine,
+                      run_oracle)
+from .shrink import shrink_program
+
+__all__ = [
+    "FAMILIES", "Program", "Row", "Submission", "generate_program",
+    "fill_mem",
+    "Divergence", "EngineRun", "check_program", "run_engine", "run_oracle",
+    "shrink_program",
+]

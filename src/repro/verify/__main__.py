@@ -1,0 +1,88 @@
+"""CLI: ``python -m repro.verify --seeds N``.
+
+Runs N seeded constrained-random programs through the differential
+harness (engine batch path + plan cache + interrupt front-end vs the
+scalar oracle).  Any divergence is shrunk to a minimal reproducer and
+printed; the exit code is non-zero iff a divergence survived.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .generator import FAMILIES, generate_program
+from .harness import check_program
+from .shrink import shrink_program
+
+
+def run_seeds(seeds, family=None, do_shrink=True, fail_fast=False,
+              log=print):
+    """Exercise every seed; returns (stats dict, list of divergences)."""
+    totals = {"programs": 0, "submissions": 0, "rows": 0, "faults": 0}
+    divergences = []
+    for seed in seeds:
+        program = generate_program(seed, family=family)
+        totals["programs"] += 1
+        totals["submissions"] += len(program.submissions)
+        totals["rows"] += program.num_rows
+        totals["faults"] += len(program.fault_sites)
+        d = check_program(program)
+        if d is None:
+            continue
+        log(f"seed {seed}: {d}")
+        if do_shrink:
+            small, small_d = shrink_program(program, d)
+            log("shrunk to minimal reproducer:")
+            log(str(small_d))
+        divergences.append(d)
+        if fail_fast:
+            break
+    return totals, divergences
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.verify",
+        description="constrained-random differential exerciser")
+    parser.add_argument("--seeds", type=int, default=50,
+                        help="number of seeded programs to run")
+    parser.add_argument("--start", type=int, default=0,
+                        help="first seed (seeds run [start, start+N))")
+    parser.add_argument("--family", choices=list(FAMILIES), default=None,
+                        help="pin every program to one engine family")
+    parser.add_argument("--replay", type=int, default=None, metavar="SEED",
+                        help="re-run a single seed verbosely and exit")
+    parser.add_argument("--fail-fast", action="store_true",
+                        help="stop at the first divergence")
+    parser.add_argument("--no-shrink", action="store_true",
+                        help="report divergences without shrinking")
+    args = parser.parse_args(argv)
+
+    if args.replay is not None:
+        program = generate_program(args.replay, family=args.family)
+        print(program.describe())
+        d = check_program(program)
+        if d is None:
+            print(f"seed {args.replay}: PASS")
+            return 0
+        print(str(d))
+        if not args.no_shrink:
+            _, small_d = shrink_program(program, d)
+            print("shrunk to minimal reproducer:")
+            print(str(small_d))
+        return 1
+
+    seeds = range(args.start, args.start + args.seeds)
+    totals, divergences = run_seeds(
+        seeds, family=args.family, do_shrink=not args.no_shrink,
+        fail_fast=args.fail_fast)
+    print(f"{totals['programs']} programs "
+          f"({totals['submissions']} submissions, {totals['rows']} rows, "
+          f"{totals['faults']} fault sites): "
+          f"{len(divergences)} divergence(s)")
+    return 1 if divergences else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

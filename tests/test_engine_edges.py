@@ -1,0 +1,118 @@
+"""Control-plane edge cases: the submission-queue / completion-record
+front-end under empty drains, repeated drains, unknown ids, and
+submissions arriving after an aborted drain."""
+
+import numpy as np
+import pytest
+
+from repro.core import (DescriptorBatch, ErrorPolicy, FaultInjector,
+                        FaultSite, IDMAEngine, MemoryMap, Protocol,
+                        Transfer1D, TransferError)
+
+
+def make_engine(**kw):
+    mem = MemoryMap.create({Protocol.AXI4: 1 << 16, Protocol.OBI: 1 << 16})
+    return IDMAEngine(mem=mem, **kw), mem
+
+
+def fill(mem, proto, n, seed=0):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, n, dtype=np.uint8)
+    mem.spaces[proto][:n] = data
+    return data
+
+
+#: disjoint destination window inside the AXI4 space; AXI4→AXI4 keeps
+#: one legalized burst per transfer (OBI would split into beats and
+#: shift the drain-global fault ordinals)
+DST = 1 << 15
+
+
+def one(i, length=64):
+    return Transfer1D(i * 256, DST + i * 256, length,
+                      Protocol.AXI4, Protocol.AXI4)
+
+
+class TestPollEdges:
+    def test_poll_unknown_tid_raises(self):
+        eng, _ = make_engine()
+        with pytest.raises(KeyError, match="unknown transfer id"):
+            eng.poll(1)
+        tid = eng.submit_async(one(0))
+        with pytest.raises(KeyError):
+            eng.poll(tid + 1)                   # never assigned
+
+    def test_poll_drained_record_stays_done(self):
+        eng, mem = make_engine()
+        fill(mem, Protocol.AXI4, 1 << 12)
+        tid = eng.submit_async(one(0))
+        eng.wait_all()
+        assert eng.poll(tid) == "done"
+        eng.wait_all()                          # second drain is empty
+        assert eng.poll(tid) == "done"          # record untouched
+
+    def test_submit_async_channel_out_of_range(self):
+        eng, _ = make_engine(num_channels=2)
+        with pytest.raises(ValueError, match="out of range"):
+            eng.submit_async(one(0), channel=2)
+
+
+class TestEmptyDrains:
+    def test_wait_all_empty_is_a_noop(self):
+        eng, _ = make_engine()
+        res = eng.wait_all()
+        assert res.aggregate.cycles == 0 and res.per_channel == []
+        assert eng.stats.completed == 0
+
+    def test_wait_all_twice_is_idempotent(self):
+        eng, mem = make_engine()
+        fill(mem, Protocol.AXI4, 1 << 12)
+        eng.submit_async(one(0))
+        eng.submit_async(one(1))
+        eng.wait_all()
+        before = (eng.stats.completed, eng.stats.bytes_moved,
+                  eng.stats.bursts,
+                  mem.spaces[Protocol.AXI4].tobytes())
+        eng.wait_all()
+        after = (eng.stats.completed, eng.stats.bytes_moved,
+                 eng.stats.bursts, mem.spaces[Protocol.AXI4].tobytes())
+        assert before == after
+
+    def test_dispatch_batch_empty_returns_no_ids(self):
+        eng, _ = make_engine()
+        empty = DescriptorBatch.from_arrays(
+            src_addr=np.empty(0, np.int64), dst_addr=np.empty(0, np.int64),
+            length=np.empty(0, np.int64))
+        assert eng.dispatch_batch(empty) == []
+        assert eng.stats.submitted == 0
+
+
+class TestSubmitAfterAbort:
+    def test_submit_async_after_abort_drains_cleanly(self):
+        """An aborted drain consumes the failing item, keeps the rest
+        queued, and the next submit_async + wait_all completes them all
+        — the error record stays terminal."""
+        eng, mem = make_engine(error_policy=ErrorPolicy(action="abort"))
+        data = fill(mem, Protocol.AXI4, 1 << 12)
+        # transient with 1 hit: fires once (first drain), then exhausted,
+        # so the re-drain — whose burst ordinals restart at 0 — is clean
+        eng.fault_injector = FaultInjector(
+            [FaultSite(index=1, kind="transient", hits=1)])
+        t0 = eng.submit_async(one(0))
+        t1 = eng.submit_async(one(1))           # ordinal 1: the offender
+        t2 = eng.submit_async(one(2))
+        with pytest.raises(TransferError, match="injected"):
+            eng.wait_all()
+        assert eng.poll(t0) == "done"
+        assert eng.poll(t1) == "error"
+        assert eng.poll(t2) == "pending"        # still queued
+        t3 = eng.submit_async(one(3))
+        eng.wait_all()
+        assert eng.poll(t2) == "done" and eng.poll(t3) == "done"
+        assert eng.poll(t1) == "error"          # terminal across drains
+        for i in (0, 2, 3):
+            lo = DST + i * 256
+            assert np.array_equal(mem.spaces[Protocol.AXI4][lo:lo + 64],
+                                  data[i * 256:i * 256 + 64])
+        assert not mem.spaces[Protocol.AXI4][DST + 256:DST + 320].any()
+        assert eng.stats.bytes_moved == 3 * 64
