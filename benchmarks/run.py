@@ -44,6 +44,7 @@ SUITES = [
     ("dataplane", "vectorized functional data plane (execute_batch)"),
     ("channel_sweep", "multi-channel aggregate bandwidth (§4 concurrency)"),
     ("plan_replay", "compile-once / replay-many paged-KV decode"),
+    ("collective_sweep", "multi-engine collective fabric scaling"),
     ("kernel_bench", "kernels + TPU rooflines"),
     ("roofline", "dry-run roofline table"),
 ]

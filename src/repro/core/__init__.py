@@ -40,9 +40,9 @@ from .simulator import (HBM, PULP_L2, RPC_DRAM, SRAM, ChannelSimResult,
 from .spec import (PRESETS, VMEM_ENDPOINT, BackendSpec, ChannelSpec,
                    CustomStage, EngineSpec, FrontendSpec, IrqSpec,
                    MidendStage, MpDistStage, MpSplitStage,
-                   RtReplicateStage, build_engine, build_frontend,
-                   cheshire, edge_ai, manticore, preset, pulp_cluster,
-                   spec_of)
+                   RtReplicateStage, build_engine, build_engines,
+                   build_frontend, cheshire, edge_ai, manticore, preset,
+                   pulp_cluster, spec_of)
 from . import analytics, instream
 
 __all__ = [
@@ -75,7 +75,7 @@ __all__ = [
     "BackendSpec", "ChannelSpec", "CustomStage", "EngineSpec",
     "FrontendSpec", "IrqSpec", "MidendStage", "MpDistStage",
     "MpSplitStage", "PRESETS", "RtReplicateStage", "VMEM_ENDPOINT",
-    "build_engine",
+    "build_engine", "build_engines",
     "build_frontend", "cheshire", "edge_ai", "manticore", "preset",
     "pulp_cluster", "spec_of",
     "analytics", "instream",

@@ -41,8 +41,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import (Callable, Dict, Hashable, Optional, Sequence, Tuple,
-                    Union)
+from typing import (Callable, Dict, Hashable, List, Optional, Sequence,
+                    Tuple, Union)
 
 from .descriptor import (DescriptorBatch, NdTransfer, Protocol, RtConfig,
                          concat_batches)
@@ -525,6 +525,43 @@ def build_engine(spec: EngineSpec,
     )
     eng._spec = spec
     return eng
+
+
+def build_engines(spec: EngineSpec, n: int,
+                  mem: Optional["MemoryMap"] = None,
+                  plan_cache: Union[None, bool, int, PlanCache] = None
+                  ) -> List[IDMAEngine]:
+    """Instantiate ``n`` engines of one spec as a shared-memory cluster.
+
+    This is the multi-engine construction path of the paper's §V
+    multi-cluster instantiations (and the `repro.dist` collective
+    fabric): all ``n`` engines share
+
+    * one `MemoryMap` (built from ``spec.mem_spaces`` unless ``mem`` is
+      given) — their functional data planes address the same bytes;
+    * the *same* ``spec.src_system``/``spec.dst_system`` `MemSystem`
+      objects — `simulate_channels` keys endpoint contention on object
+      identity, so the engines contend for the endpoint's outstanding
+      credits, data port and request channel;
+    * one `PlanCache` (unless disabled): structurally repeated traffic
+      — the same collective phase on another engine, or the next
+      iteration of the same schedule — replays captured plans across
+      engine instances.
+    """
+    if n < 1:
+        raise ValueError("build_engines needs n >= 1")
+    from .backend import MemoryMap
+    if mem is None and spec.mem_spaces:
+        mem = MemoryMap.create(dict(spec.mem_spaces))
+    if plan_cache is None:
+        plan_cache = spec.plan_cache
+    # normalize once so every engine shares a single cache instance
+    if plan_cache is True:
+        plan_cache = PlanCache()
+    elif isinstance(plan_cache, int) and not isinstance(plan_cache, bool):
+        plan_cache = PlanCache(capacity=plan_cache)
+    return [build_engine(spec, mem=mem, plan_cache=plan_cache)
+            for _ in range(n)]
 
 
 def build_frontend(spec: Union[EngineSpec, FrontendSpec],

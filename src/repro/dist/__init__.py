@@ -1,0 +1,30 @@
+"""repro.dist — the distributed layer: sharding rules, collectives over
+the multi-engine DMA fabric, checkpointing, fault tolerance, pipeline
+parallelism.
+
+Submodules are imported lazily: `collectives` (and the `CollectiveFabric`
+underneath it) is pure NumPy over `repro.core`, while `sharding`,
+`checkpoint` and `pipeline_parallel` need jax.  Importing `repro.dist`
+itself must therefore stay dependency-free so numpy-only environments
+(the CI fuzz job, the descriptor-plane perf job) can still reach the
+fabric.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("sharding", "collectives", "checkpoint", "fault",
+               "pipeline_parallel")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

@@ -1,0 +1,189 @@
+"""Checkpoint engine: atomic step directories with per-leaf checksums
+and the backend's `ErrorPolicy` verbs applied to leaf writes.
+
+Layout::
+
+    <dir>/step_00000007/
+        arrays.npz    # leaf_000, leaf_001, ...  (bfloat16 as uint16)
+        meta.json     # keystr names, dtypes, shapes, crc32 per leaf
+        COMPLETE      # marker, written last — absent == partial save
+
+A leaf write that raises `IOError` goes through the same three verbs the
+DMA backend applies to faulted bursts: ``replay`` retries the leaf (up
+to ``max_replays``), ``continue`` drops the leaf and leaves the
+checkpoint marked partial (ineligible for `latest`), ``abort``
+propagates.  `restore` verifies every leaf's crc32 against meta.json and
+raises ``IOError("checksum mismatch ...")`` on corruption; with
+``shardings`` it device_puts each restored leaf onto its
+`NamedSharding` (the elastic restore path — save on one topology,
+restore onto another).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+from repro.core.engine import ErrorPolicy
+
+__all__ = ["PAYLOAD", "META", "MARKER", "CheckpointInfo", "save",
+           "restore", "latest", "list_checkpoints", "prune"]
+
+PAYLOAD = "arrays.npz"
+META = "meta.json"
+MARKER = "COMPLETE"
+
+_DIR_FMT = "step_%08d"
+
+
+@dataclass(frozen=True)
+class CheckpointInfo:
+    step: int
+    path: str
+    complete: bool
+
+
+def _leaf_key(i: int) -> str:
+    return f"leaf_{i:03d}"
+
+
+def _storable(arr: np.ndarray) -> np.ndarray:
+    """npz-safe view: bfloat16 (an ml_dtypes extension dtype the npy
+    format cannot describe portably) round-trips as uint16 bits."""
+    if arr.dtype.name == "bfloat16":
+        return arr.view(np.uint16)
+    return arr
+
+
+def save(tree: Any, directory: str, step: int,
+         error_policy: Optional[ErrorPolicy] = None,
+         _fault_hook: Optional[Callable[[str], None]] = None) -> str:
+    """Write ``tree`` as checkpoint ``step`` under ``directory`` and
+    return the step directory path.  ``_fault_hook(name)`` (tests) runs
+    before each leaf write and may raise `IOError` to exercise the
+    error-policy verbs."""
+    from jax.tree_util import keystr, tree_flatten_with_path
+
+    policy = error_policy or ErrorPolicy()
+    path = os.path.join(directory, _DIR_FMT % step)
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = tree_flatten_with_path(tree)
+    arrays = {}
+    meta_leaves: List[dict] = []
+    complete = True
+    for i, (leaf_path, leaf) in enumerate(leaves):
+        name = keystr(leaf_path)
+
+        def write_leaf(name=name, leaf=leaf, i=i):
+            if _fault_hook is not None:
+                _fault_hook(name)
+            arr = _storable(np.asarray(leaf))
+            arrays[_leaf_key(i)] = arr
+            meta_leaves.append({
+                "name": name,
+                "key": _leaf_key(i),
+                "dtype": np.asarray(leaf).dtype.name,
+                "shape": list(np.asarray(leaf).shape),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            })
+
+        attempts = 0
+        while True:
+            try:
+                write_leaf()
+                break
+            except IOError:
+                if policy.action == "abort":
+                    raise
+                if policy.action == "continue":
+                    complete = False
+                    break
+                attempts += 1
+                if attempts > max(1, policy.max_replays):
+                    raise
+    np.savez(os.path.join(path, PAYLOAD), **arrays)
+    with open(os.path.join(path, META), "w") as f:
+        json.dump({"step": step, "complete": complete,
+                   "leaves": meta_leaves}, f, indent=1)
+    if complete:
+        with open(os.path.join(path, MARKER), "w") as f:
+            f.write("ok\n")
+    return path
+
+
+def restore(path: str, like: Any, shardings: Any = None) -> Any:
+    """Read a checkpoint back into the structure of ``like`` (e.g. a
+    `jax.eval_shape` tree), verifying every leaf's checksum.  With
+    ``shardings`` (a matching tree of `NamedSharding`), each leaf is
+    device_put onto its sharding."""
+    from jax.tree_util import keystr, tree_flatten_with_path, tree_unflatten
+
+    with open(os.path.join(path, META)) as f:
+        meta = json.load(f)
+    by_name = {m["name"]: m for m in meta["leaves"]}
+    arrays = np.load(os.path.join(path, PAYLOAD))
+    like_leaves, treedef = tree_flatten_with_path(like)
+    out = []
+    for leaf_path, leaf in like_leaves:
+        name = keystr(leaf_path)
+        m = by_name.get(name)
+        if m is None:
+            raise IOError(f"checkpoint {path} has no leaf {name!r}")
+        arr = arrays[m["key"]]
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != m["crc32"]:
+            raise IOError(f"checksum mismatch for leaf {name!r} in {path}: "
+                          f"stored {m['crc32']:#010x}, read {crc:#010x}")
+        if m["dtype"] == "bfloat16":
+            from ml_dtypes import bfloat16
+            arr = arr.view(bfloat16)
+        arr = arr.reshape(m["shape"])
+        out.append(arr)
+    tree = tree_unflatten(treedef, out)
+    if shardings is not None:
+        import jax
+        tree = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree
+
+
+def list_checkpoints(directory: str) -> List[CheckpointInfo]:
+    """All checkpoints under ``directory``, sorted by step (complete or
+    not)."""
+    infos = []
+    if not os.path.isdir(directory):
+        return infos
+    for entry in sorted(os.listdir(directory)):
+        if not entry.startswith("step_"):
+            continue
+        path = os.path.join(directory, entry)
+        if not os.path.isdir(path):
+            continue
+        try:
+            step = int(entry[len("step_"):])
+        except ValueError:
+            continue
+        infos.append(CheckpointInfo(
+            step=step, path=path,
+            complete=os.path.exists(os.path.join(path, MARKER))))
+    return sorted(infos, key=lambda i: i.step)
+
+
+def latest(directory: str) -> Optional[CheckpointInfo]:
+    """The newest *complete* checkpoint, or None — partial saves (the
+    ``continue`` verb, or a crash mid-save) are never restore targets."""
+    complete = [i for i in list_checkpoints(directory) if i.complete]
+    return complete[-1] if complete else None
+
+
+def prune(directory: str, keep: int) -> None:
+    """Delete the oldest checkpoints, keeping the newest ``keep``."""
+    infos = list_checkpoints(directory)
+    for info in infos[:max(0, len(infos) - keep)]:
+        shutil.rmtree(info.path)

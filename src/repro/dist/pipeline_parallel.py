@@ -1,0 +1,92 @@
+"""GPipe-style pipeline parallelism over a ``'stage'`` mesh axis.
+
+Each device holds one stage's parameters; microbatches stream through
+the pipeline via `jax.lax.ppermute` ring shifts inside a `scan` over
+``M + S - 1`` ticks.  The schedule is the classic fill/steady/drain
+trapezoid, so `pipeline_bubble` gives its idle fraction:
+``(S - 1) / (M + S - 1)``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+__all__ = ["pipeline_bubble", "stack_stage_params", "gpipe"]
+
+
+def pipeline_bubble(num_stages: int, num_microbatches: int) -> float:
+    """Idle fraction of the GPipe schedule: ``(S-1) / (M + S - 1)``."""
+    s, m = int(num_stages), int(num_microbatches)
+    if s < 1 or m < 1:
+        raise ValueError("pipeline_bubble needs stages >= 1 and "
+                         "microbatches >= 1")
+    return (s - 1) / (m + s - 1)
+
+
+def stack_stage_params(stage_params_list):
+    """Stack a list of per-stage parameter trees leaf-wise into one tree
+    with a leading stage axis — the layout `gpipe` shards over."""
+    import jax
+    import jax.numpy as jnp
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                  *stage_params_list)
+
+
+def gpipe(stage_fn: Callable, mesh, axis: str = "stage") -> Callable:
+    """Build ``fn(stacked_params, x) -> y`` running ``stage_fn(w, mb)``
+    as a GPipe pipeline over the ``axis`` mesh dimension.
+
+    ``stacked_params`` carries a leading stage axis (`stack_stage_params`)
+    sharded one-stage-per-device; ``x`` is ``(M, ...)`` microbatched and
+    replicated.  Microbatch activations ring-shift stage→stage+1 with
+    `ppermute` each tick; the last stage collects its valid outputs, and
+    a final `psum` replicates the ``(M, ...)`` result.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    num_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def pipelined(params_local, x):
+        # the local params shard has a leading stage axis of length 1
+        w = jax.tree_util.tree_map(lambda a: a[0], params_local)
+        i = jax.lax.axis_index(axis)
+        num_micro = x.shape[0]
+        ticks = num_micro + num_stages - 1
+        outs = jnp.zeros_like(x)
+        cur = jnp.zeros_like(x[0])
+
+        def tick(carry, t):
+            cur, outs = carry
+            # stage 0 injects microbatch t from the input stream; later
+            # stages consume what the ring delivered last tick
+            inp = jnp.where(i == 0,
+                            x[jnp.clip(t, 0, num_micro - 1)], cur)
+            y = stage_fn(w, inp)
+            nxt = jax.lax.ppermute(
+                y, axis,
+                [(j, (j + 1) % num_stages) for j in range(num_stages)])
+            # the last stage holds microbatch m = t - (S-1) this tick
+            m = t - (num_stages - 1)
+            valid = (i == num_stages - 1) & (m >= 0) & (m < num_micro)
+            written = jax.lax.dynamic_update_slice(
+                outs, y[None], (jnp.clip(m, 0, num_micro - 1),) +
+                (0,) * (outs.ndim - 1))
+            outs = jnp.where(valid, written, outs)
+            return (nxt, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (cur, outs),
+                                    jnp.arange(ticks))
+        # only the last stage wrote anything; psum replicates the result
+        return jax.lax.psum(outs, axis)
+
+    def fn(stacked_params, x):
+        in_params_spec = jax.tree_util.tree_map(
+            lambda _: P(axis), stacked_params)
+        return shard_map(pipelined, mesh=mesh,
+                         in_specs=(in_params_spec, P()),
+                         out_specs=P(), check_rep=False)(stacked_params, x)
+
+    return fn

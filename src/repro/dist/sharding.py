@@ -1,0 +1,232 @@
+"""Name-based sharding rules: parameter path → `PartitionSpec`.
+
+One rule table drives everything: `spec_for_path` classifies a parameter
+by the last meaningful token of its tree path (column-parallel
+projections shard their output dim over ``'model'``, row-parallel
+projections shard their input dim, embeddings shard the vocab dim, norms
+replicate), and `param_specs`/`param_shardings`/`moment_specs` map it
+over whole trees with divisibility guards (a dim that does not divide
+the mesh axis falls back to replicated instead of tracing an error).
+
+Activation sharding is pushed through `hint(name, x)` call sites inside
+the models: by default `hint` is the identity (single-device paths and
+`repro.models` importers with no mesh installed), and `build_cell`
+installs a mesh-specific constraint function via
+``set_hint_fn(make_hint_fn(mesh, ...))``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# -- rule table -------------------------------------------------------------
+
+#: output-dim ('model' on the last axis) sharded projections
+_COL_PARALLEL = {"wq", "wk", "wv", "wqkv", "w_gate", "w_up", "in_proj",
+                 "up_proj", "gate_proj", "q_proj", "k_proj", "v_proj"}
+#: input-dim ('model' on axis ndim-2) sharded projections
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "down_proj", "o_proj"}
+#: vocab-dim sharded embedding tables (2-D: (vocab, d_model))
+_EMBED = {"embed", "embedder", "embedding", "wte", "tok_embed"}
+#: leaf-name suffixes that are not the classifying token
+_LEAF_SUFFIXES = {"kernel", "bias", "scale", "table", "w", "b"}
+
+
+def _tokens(path: str) -> Tuple[str, ...]:
+    """Tokenize a parameter path: both ``a/b/c`` strings and jax
+    ``keystr`` output (``['a']['b']``, ``[0]``) normalize to the same
+    token stream."""
+    return tuple(re.findall(r"[A-Za-z0-9_.]+", path))
+
+
+def _name_token(tokens: Tuple[str, ...]) -> str:
+    """The classifying token: the last path component that is neither a
+    generic leaf suffix (kernel/bias/scale/...) nor a sequence index."""
+    for t in reversed(tokens):
+        if t not in _LEAF_SUFFIXES and not t.isdigit():
+            return t
+    return tokens[-1] if tokens else ""
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    """Rule-table lookup: parameter tree path + rank → `PartitionSpec`.
+
+    Column-parallel weights shard the output (last) dim over ``'model'``,
+    row-parallel weights shard the input (``ndim - 2``) dim, 2-D
+    embedding tables shard the vocab (first) dim, everything else —
+    norms, biases, routers, scalars — replicates.
+    """
+    toks = _tokens(path)
+    name = _name_token(toks)
+    spec = [None] * ndim
+    if ndim >= 2:
+        if name in _COL_PARALLEL:
+            spec[-1] = "model"
+        elif name in _ROW_PARALLEL:
+            spec[-2] = "model"
+        elif ndim == 2 and (name in _EMBED or
+                            (toks and toks[-1] in ("table", "embedding"))):
+            spec[0] = "model"
+    return P(*spec)
+
+
+# -- mesh helpers -----------------------------------------------------------
+
+def zip_axis(mesh: Mesh) -> Tuple[Tuple[str, int], ...]:
+    """(axis_name, axis_size) pairs of a mesh — ``dict(zip_axis(mesh))``
+    is the axis-size lookup used throughout the models."""
+    return tuple(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch-sharding axes: every mesh axis that is not a model/
+    pipeline axis.  Returned as a tuple so it can be used both as a
+    `PartitionSpec` entry and as a `jax.lax` collective axis name."""
+    return tuple(a for a in mesh.axis_names
+                 if a not in ("model", "stage", "expert"))
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip_axis(mesh))
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _guarded_spec(mesh: Mesh, spec, shape) -> P:
+    """Drop spec entries whose mesh-axis size does not divide the dim
+    (or is 1): the rule table is shape-agnostic, the guard makes it safe
+    for any (arch, mesh) cell."""
+    entries = list(tuple(spec)) + [None] * (len(shape) - len(tuple(spec)))
+    out = []
+    for dim, ax in zip(shape, entries):
+        size = _axes_size(mesh, ax)
+        out.append(ax if (size > 1 and dim % size == 0) else None)
+    return P(*out)
+
+
+# -- parameter trees --------------------------------------------------------
+
+def param_specs(tree: Any, mesh: Mesh) -> Any:
+    """Tree of arrays/ShapeDtypeStructs → tree of `PartitionSpec` via the
+    path rule table, with per-dim divisibility guards."""
+    from jax.tree_util import keystr, tree_flatten_with_path, tree_unflatten
+    leaves, treedef = tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        shape = tuple(leaf.shape)
+        spec = spec_for_path(keystr(path), len(shape))
+        out.append(_guarded_spec(mesh, spec, shape))
+    return tree_unflatten(treedef, out)
+
+
+def moment_specs(tree: Any, mesh: Mesh) -> Any:
+    """Optimizer moments shard exactly like their parameters."""
+    return param_specs(tree, mesh)
+
+
+def param_shardings(tree: Any, mesh: Mesh) -> Any:
+    """`param_specs` wrapped into `NamedSharding`s (jit in_shardings)."""
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_specs(tree, mesh),
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def residual_spec(mesh: Mesh, sequence_parallel: bool) -> NamedSharding:
+    """The between-blocks residual-stream sharding (B, S, d): batch over
+    the data axes, and the sequence over ``'model'`` when sequence
+    parallelism is on."""
+    dp = data_axes(mesh)
+    batch = dp if dp else None
+    seq = "model" if (sequence_parallel and
+                      _axes_size(mesh, "model") > 1) else None
+    return NamedSharding(mesh, P(batch, seq, None))
+
+
+# -- MoE mesh install (shard_map dispatch opt-in) ---------------------------
+
+_MOE_MESH: Optional[Mesh] = None
+
+
+def set_moe_mesh(mesh: Optional[Mesh]) -> None:
+    """Install (or clear, with None) the mesh `moe_forward` uses for its
+    shard_map dispatch path."""
+    global _MOE_MESH
+    _MOE_MESH = mesh
+
+
+def moe_mesh() -> Optional[Mesh]:
+    return _MOE_MESH
+
+
+# -- activation hints -------------------------------------------------------
+
+_HINT_FN: Optional[Callable[[str, Any], Any]] = None
+
+
+def hint(name: str, x):
+    """Named activation-sharding hint site.  Identity until a mesh hint
+    function is installed (`set_hint_fn`), so model code is importable
+    and runnable with no mesh at all."""
+    if _HINT_FN is None:
+        return x
+    return _HINT_FN(name, x)
+
+
+def set_hint_fn(fn: Optional[Callable[[str, Any], Any]]) -> None:
+    global _HINT_FN
+    _HINT_FN = fn
+
+
+def make_hint_fn(mesh: Mesh, n_kv_heads: int, sequence_parallel: bool,
+                 ssm_heads: int = 0) -> Callable[[str, Any], Any]:
+    """Build the per-(arch, mesh) hint function for the model call sites.
+
+    Attention is head-parallel over ``'model'`` when the KV heads divide
+    the model axis, context-parallel over the q-block dim otherwise; FFN
+    hidden activations shard the d_ff dim; SSM heads shard over
+    ``'model'`` when divisible.  Every entry is divisibility-guarded
+    against the actual activation shape at trace time.
+    """
+    dp = data_axes(mesh) or None
+    model = _axes_size(mesh, "model")
+    heads_ok = model > 1 and n_kv_heads and n_kv_heads % model == 0
+    ssm_ok = model > 1 and ssm_heads and ssm_heads % model == 0
+
+    def specs_for(name: str, ndim: int):
+        if name == "attn_q6" and ndim == 6:       # (B, Hkv, G, nq, bq, D)
+            return P(dp, "model", None, None, None, None) if heads_ok \
+                else P(dp, None, None, "model", None, None)
+        if name == "attn_kv5" and ndim == 5:      # (B, Hkv, nk, bk, D)
+            return P(dp, "model", None, None, None) if heads_ok \
+                else P(dp, None, None, None, None)
+        if name == "attn_out" and ndim == 4:      # (B, Hq, Sq, D)
+            return P(dp, "model", None, None) if heads_ok \
+                else P(dp, None, "model", None)
+        if name == "ffn_hidden" and ndim == 3:    # (B, S, d_ff)
+            return P(dp, None, "model")
+        if name == "ssm_x4" and ndim == 4:        # (B, H, S, P)
+            return P(dp, "model", None, None) if ssm_ok else P(dp, None,
+                                                               None, None)
+        if name == "ssm_dt3" and ndim == 3:       # (B, H, S)
+            return P(dp, "model", None) if ssm_ok else P(dp, None, None)
+        return None
+
+    def hint_fn(name: str, x):
+        spec = specs_for(name, getattr(x, "ndim", None))
+        if spec is None:
+            return x
+        guarded = _guarded_spec(mesh, spec, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, guarded))
+
+    return hint_fn

@@ -11,28 +11,53 @@ from __future__ import annotations
 import argparse
 import sys
 
+from .collective import (check_collective_program,
+                         generate_collective_program,
+                         shrink_collective_program)
 from .generator import FAMILIES, generate_program
 from .harness import check_program
 from .shrink import shrink_program
+
+#: the full family rotation: every engine family from the generator plus
+#: the multi-engine collective-fabric family (seed % len picks one)
+ALL_FAMILIES = FAMILIES + ("collective",)
+
+
+def _run_one(seed, family):
+    """Generate + check one seed; returns (program, divergence, shrinker).
+    ``seed % len(ALL_FAMILIES)`` rotates through the scalar-oracle engine
+    families AND the multi-engine collective family."""
+    fam = family or ALL_FAMILIES[seed % len(ALL_FAMILIES)]
+    if fam == "collective":
+        program = generate_collective_program(seed)
+        return program, check_collective_program(program), \
+            shrink_collective_program
+    program = generate_program(seed, family=fam)
+    return program, check_program(program), shrink_program
 
 
 def run_seeds(seeds, family=None, do_shrink=True, fail_fast=False,
               log=print):
     """Exercise every seed; returns (stats dict, list of divergences)."""
-    totals = {"programs": 0, "submissions": 0, "rows": 0, "faults": 0}
+    totals = {"programs": 0, "submissions": 0, "rows": 0, "faults": 0,
+              "collectives": 0}
     divergences = []
     for seed in seeds:
-        program = generate_program(seed, family=family)
+        program, d, shrinker = _run_one(seed, family)
         totals["programs"] += 1
-        totals["submissions"] += len(program.submissions)
         totals["rows"] += program.num_rows
-        totals["faults"] += len(program.fault_sites)
-        d = check_program(program)
+        if hasattr(program, "submissions"):
+            totals["submissions"] += len(program.submissions)
+            totals["faults"] += len(program.fault_sites)
+        else:
+            totals["collectives"] += 1
+            totals["faults"] += sum(len(s) for s in
+                                    program.fault_sites.values())
         if d is None:
             continue
         log(f"seed {seed}: {d}")
         if do_shrink:
-            small, small_d = shrink_program(program, d)
+            small, small_d = shrinker(program, d)
             log("shrunk to minimal reproducer:")
             log(str(small_d))
         divergences.append(d)
@@ -49,7 +74,7 @@ def main(argv=None) -> int:
                         help="number of seeded programs to run")
     parser.add_argument("--start", type=int, default=0,
                         help="first seed (seeds run [start, start+N))")
-    parser.add_argument("--family", choices=list(FAMILIES), default=None,
+    parser.add_argument("--family", choices=list(ALL_FAMILIES), default=None,
                         help="pin every program to one engine family")
     parser.add_argument("--replay", type=int, default=None, metavar="SEED",
                         help="re-run a single seed verbosely and exit")
@@ -60,15 +85,14 @@ def main(argv=None) -> int:
     args = parser.parse_args(argv)
 
     if args.replay is not None:
-        program = generate_program(args.replay, family=args.family)
+        program, d, shrinker = _run_one(args.replay, args.family)
         print(program.describe())
-        d = check_program(program)
         if d is None:
             print(f"seed {args.replay}: PASS")
             return 0
         print(str(d))
         if not args.no_shrink:
-            _, small_d = shrink_program(program, d)
+            _, small_d = shrinker(program, d)
             print("shrunk to minimal reproducer:")
             print(str(small_d))
         return 1

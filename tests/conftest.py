@@ -8,8 +8,20 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+
 # Skip collecting test modules whose hard dependencies are not present in
-# this build, instead of aborting the whole run at collection time.
+# this build, instead of aborting the whole run at collection time.  The
+# table is DATA so the skip set is auditable: `SKIP_REASONS` records WHY
+# each module was dropped, `pytest_report_header` prints it at the top of
+# every run, and tests/test_dep_skip_guard.py fails the suite if an entry
+# here names a dependency that actually exists (a stale skip silently
+# hiding real tests).
+_DEP_SKIPS = {
+    "hypothesis": ["test_legalizer.py", "test_midend.py",
+                   "test_property_system.py"],
+}
+
+
 def _have(module: str) -> bool:
     try:
         return importlib.util.find_spec(module) is not None
@@ -18,13 +30,19 @@ def _have(module: str) -> bool:
 
 
 collect_ignore = []
-if not _have("hypothesis"):
-    collect_ignore += ["test_legalizer.py", "test_midend.py",
-                       "test_property_system.py"]
-if not _have("repro.dist"):
-    collect_ignore += ["test_archs_smoke.py", "test_checkpoint.py",
-                       "test_serve.py", "test_sharding_dist.py",
-                       "test_train_fault.py"]
+SKIP_REASONS = {}   # test module -> missing import name
+for _dep, _modules in _DEP_SKIPS.items():
+    if not _have(_dep):
+        collect_ignore += _modules
+        for _m in _modules:
+            SKIP_REASONS[_m] = _dep
+
+
+def pytest_report_header(config):
+    if not SKIP_REASONS:
+        return ["dep-skips: none (all optional deps present)"]
+    return ["dep-skips: " + ", ".join(
+        f"{m} (missing {dep!r})" for m, dep in sorted(SKIP_REASONS.items()))]
 
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600

@@ -1,0 +1,40 @@
+"""Guard against stale dep-skips: every module conftest.py drops at
+collection time must be dropped for a dependency that is ACTUALLY
+missing.  The failure mode this catches: a package gets added to the
+image (or a subsystem lands in-repo) but its tests silently stay
+skipped because nobody revisits the skip table."""
+
+import os
+
+import conftest
+
+
+def test_skip_table_modules_exist():
+    """Every module named in the skip table is a real test file — a
+    renamed test must not leave a dangling skip entry behind."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    for modules in conftest._DEP_SKIPS.values():
+        for m in modules:
+            assert os.path.exists(os.path.join(here, m)), \
+                f"skip table names {m}, which does not exist"
+
+
+def test_no_stale_dep_skips():
+    """A module may only be skipped while its dependency is missing.  If
+    this fails, the named import now resolves: delete the skip-table
+    entry (or fix the test module) so those tests run again."""
+    stale = {m: dep for m, dep in conftest.SKIP_REASONS.items()
+             if conftest._have(dep)}
+    assert not stale, (
+        f"stale dep-skips — these deps now import fine but their test "
+        f"modules are still being dropped: {stale}")
+
+
+def test_skip_reasons_match_ignores():
+    """Every collection-time ignore has a recorded reason (the pytest
+    header must account for every dropped module)."""
+    ignored = set(conftest.collect_ignore)
+    explained = set(conftest.SKIP_REASONS)
+    assert ignored == explained, (
+        f"unexplained ignores: {ignored - explained}; "
+        f"reasons without ignores: {explained - ignored}")
