@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 from repro.core import (DescriptorBatch, EngineConfig, SRAM, Transfer1D,
-                        simulate_batch, legal_latency)
+                        simulate_batch)
 
 
 def run(csv_rows):

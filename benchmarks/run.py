@@ -42,6 +42,7 @@ SUITES = [
     ("workload_speedup", "§3.4 / §3.5 (Fig. 11)"),
     ("descriptor_plane", "SoA vs object descriptor hot path"),
     ("dataplane", "vectorized functional data plane (execute_batch)"),
+    ("sanitize", "static hazard sweep throughput vs execute_batch"),
     ("channel_sweep", "multi-channel aggregate bandwidth (§4 concurrency)"),
     ("plan_replay", "compile-once / replay-many paged-KV decode"),
     ("collective_sweep", "multi-engine collective fabric scaling"),
@@ -53,6 +54,7 @@ SUITES = [
 _MODULES = {name: f"benchmarks.{name}" for name, _ in SUITES}
 _MODULES["descriptor_plane"] = "benchmarks.descriptor_plane_bench"
 _MODULES["dataplane"] = "benchmarks.dataplane_bench"
+_MODULES["sanitize"] = "benchmarks.sanitize_bench"
 _MODULES["plan_replay"] = "benchmarks.plan_replay_bench"
 
 

@@ -1,0 +1,81 @@
+"""Sanitizer throughput: the sweep-line must be cheap relative to the
+execution it protects.
+
+The workload is the data-plane benchmark's 1M-burst scatter/gather
+stream (disjoint 64-B slots, ragged 1..64-B bursts, HBM→VMEM) — the
+same program `dataplane_bench` gates `execute_batch` on.  Two numbers:
+
+1. sanitizer wall clock over the 1M-row submission
+   (`repro.sanitize.check_batch` — interval build, per-space argsort,
+   cummax overlap screen, pair classification);
+2. `execute_batch` wall clock over the same program's legalized stream.
+
+The CI gate is their ratio: an *opt-in* analysis that costs more than a
+fraction of the run it certifies would never be left enabled, so the
+sweep must stay under 10% of the execution time it protects.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import MemoryMap, Protocol, execute_batch, legalize_batch
+from repro.sanitize import check_batch
+
+from .dataplane_bench import BUS, N, SLOT, scatter_gather_stream
+
+#: last run's headline numbers, for `benchmarks.run --json`
+LAST = {}
+
+#: the CI gate: sanitize wall clock / execute_batch wall clock
+RATIO_GATE = 0.10
+
+
+def run(csv_rows, quick=False):
+    n = N // 20 if quick else N
+    tag = "50k" if quick else "1M"
+    # --quick relaxes the ratio only: small streams under-amortize the
+    # sweep's fixed setup against execute_batch's byte movement
+    gate = 1.0 if quick else RATIO_GATE
+
+    stream = scatter_gather_stream(n=n)
+
+    t_san = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        report = check_batch(stream)
+        t_san = min(t_san, time.perf_counter() - t0)
+    assert report.clean, \
+        f"scatter/gather stream flagged: {report.codes}"
+    assert report.checked_rows == n
+
+    legal = legalize_batch(stream, bus_width=BUS)
+    mem = MemoryMap.create({Protocol.HBM: n * SLOT,
+                            Protocol.VMEM: n * SLOT})
+    rng = np.random.default_rng(1)
+    mem.spaces[Protocol.HBM][:] = rng.integers(0, 256, n * SLOT,
+                                               dtype=np.uint8)
+    t_exec = float("inf")
+    for _ in range(3):
+        mem.spaces[Protocol.VMEM][:] = 0
+        t0 = time.perf_counter()
+        execute_batch(legal, mem, bus_width=BUS)
+        t_exec = min(t_exec, time.perf_counter() - t0)
+
+    ratio = t_san / t_exec
+    rows_per_s = n / t_san
+    csv_rows.append((f"sanitize_sweep_{tag}_s", t_san, ""))
+    csv_rows.append((f"sanitize_sweep_{tag}_rows_per_s", rows_per_s, ""))
+    csv_rows.append((f"sanitize_vs_execute_{tag}_ratio", ratio,
+                     f"target<={gate:.2f}"))
+
+    LAST.update({
+        f"sweep_{tag}_s": t_san,
+        f"sweep_{tag}_rows_per_s": rows_per_s,
+        f"execute_{tag}_s": t_exec,
+        f"vs_execute_{tag}_ratio": ratio,
+    })
+    assert ratio <= gate, \
+        f"sanitizer costs {ratio:.2f}x of execute_batch (gate {gate:.2f})"

@@ -16,8 +16,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core import (DescriptorBatch, EngineConfig, MemSystem, Protocol,
-                        Transfer1D, simulate_batch)
+from repro.core import (DescriptorBatch, EngineConfig, MemSystem, Transfer1D,
+                        simulate_batch)
 
 # ---------------------------------------------------------------- MemPool
 

@@ -14,8 +14,8 @@ not O(#layers), which is what makes 33 dry-run cells compile in minutes.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 # Layer kinds
 ATTN_FULL = "attn_full"

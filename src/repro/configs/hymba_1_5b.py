@@ -8,8 +8,8 @@ are omitted (noted in DESIGN.md).  Bounded attention state + SSM ⇒
 `long_500k` RUNS.
 """
 
-from .base import (ArchConfig, ATTN_FULL, HYBRID, SSMConfig, TRAIN_4K,
-                   PREFILL_32K, DECODE_32K, LONG_500K)
+from .base import (ArchConfig, SSMConfig, TRAIN_4K, PREFILL_32K, DECODE_32K,
+                   LONG_500K)
 
 # layers 0, 15, 31 use full attention in their hybrid heads
 _PATTERN = (

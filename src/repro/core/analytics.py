@@ -15,10 +15,9 @@ AW = 32 b, DW = 32 b, NAx = 2 — except the 'decoupling' row, whose quoted
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
-import numpy as np
 
 from .descriptor import DescriptorBatch, Protocol
 from .legalizer import legal_latency

@@ -28,7 +28,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -167,6 +167,7 @@ class IDMAEngine:
         plan_cache: Optional[PlanCache] = None,
         pipeline: Sequence[object] = (),
         irq: Optional[object] = None,
+        sanitize: Union[bool, str] = False,
     ) -> None:
         if num_backends > 1 and backend_boundary <= 0:
             raise ValueError("multi-back-end engines need backend_boundary")
@@ -245,6 +246,20 @@ class IDMAEngine:
             coalesce_count=getattr(irq, "coalesce_count", 1),
             coalesce_cycles=getattr(irq, "coalesce_cycles", 0))
         self.irq.register(self._irq_complete)
+        #: opt-in static sanitizer (`repro.sanitize`): when truthy, every
+        #: `wait_all` sweeps the queued programs for hazards before the
+        #: drain touches memory, and plan-cache hits are audited against a
+        #: from-scratch lowering.  ``"raise"`` (or ``True``) raises
+        #: `SanitizeError` on an error-severity finding; ``"warn"`` emits
+        #: a warning and drains anyway.
+        if sanitize not in (False, True, "raise", "warn"):
+            raise ValueError(
+                f"sanitize must be False, True, 'raise' or 'warn', "
+                f"got {sanitize!r}")
+        self.sanitize = "raise" if sanitize is True else sanitize
+        #: sanitizer reports of this engine's drains / plan audits (only
+        #: populated when `sanitize` is enabled)
+        self.sanitize_reports: List[object] = []
         #: verification fault-injection hook (`backend.FaultInjector`):
         #: seeded deterministic fault sites consulted by the drain loop,
         #: indexed by drain-global burst ordinal
@@ -337,7 +352,54 @@ class IDMAEngine:
             raise KeyError(f"unknown transfer id {tid}")
         return rec.status
 
-    def wait_all(self) -> sim.ChannelSimResult:
+    def _sanitize_verdict(self, report) -> None:
+        """Apply the configured ``sanitize`` mode to one report."""
+        if report.clean:
+            return
+        if self.sanitize == "warn":
+            warnings.warn(report.format(), RuntimeWarning, stacklevel=3)
+            return
+        from repro.sanitize import SanitizeError
+        raise SanitizeError(report)
+
+    def _drain_order(self, schedule: Optional[Union[str, int]]
+                     ) -> List[Tuple[int, int, object]]:
+        """Functional drain order over the queued items.
+
+        ``None`` is the production order: a min-head-tid merge across the
+        channel FIFOs, i.e. items sorted by first transfer id.  The
+        adversarial schedules (``"reverse"``, or an int seed for a random
+        pick per step) permute only the *cross-channel* interleaving —
+        each channel's own FIFO order is invariant, which is exactly the
+        ordering guarantee the hardware gives and the sanitizer models.
+        """
+        if schedule is None:
+            return sorted((it for q in self._queues for it in q),
+                          key=lambda it: it[0])
+        heads = [list(q) for q in self._queues]
+        cursors = [0] * len(heads)
+        rng = (np.random.default_rng(schedule)
+               if isinstance(schedule, (int, np.integer))
+               and not isinstance(schedule, bool) else None)
+        if rng is None and schedule != "reverse":
+            raise ValueError(
+                f"schedule must be None, 'reverse' or an int seed, "
+                f"got {schedule!r}")
+        items: List[Tuple[int, int, object]] = []
+        remaining = sum(len(h) for h in heads)
+        while remaining:
+            ready = [c for c, h in enumerate(heads) if cursors[c] < len(h)]
+            if rng is not None:
+                c = int(ready[rng.integers(len(ready))])
+            else:   # "reverse": serve the channel with the largest head tid
+                c = max(ready, key=lambda c: heads[c][cursors[c]][0])
+            items.append(heads[c][cursors[c]])
+            cursors[c] += 1
+            remaining -= 1
+        return items
+
+    def wait_all(self, schedule: Optional[Union[str, int]] = None,
+                 tie_seed: Optional[int] = None) -> sim.ChannelSimResult:
         """Drain every channel queue: run the timing fabric over the
         concurrent per-channel streams (`simulate_channels`, shared
         `src_system`/`dst_system` endpoints), then execute the functional
@@ -367,9 +429,23 @@ class IDMAEngine:
         record flips to ``"error"``, its error event (and every completion
         before it) is delivered, undrained items stay queued, and the
         error propagates.
+
+        ``schedule`` permutes the cross-channel service order of the
+        functional drain (`None` — first-tid order, the default;
+        ``"reverse"`` — largest head tid first; an ``int`` — a seeded
+        random channel pick per step).  Per-channel FIFO order is always
+        preserved, so programs with no cross-channel hazards produce
+        byte-identical memory under every schedule — the differential
+        contract `repro.verify` checks against the sanitizer's verdict.
+        ``tie_seed`` is forwarded to `simulate_channels` (timing-only
+        heap tie-breaking, never functional).
         """
-        items = sorted((it for q in self._queues for it in q),
-                       key=lambda it: it[0])
+        if self.sanitize and any(self._queues):
+            from repro.sanitize import check_engine
+            report = check_engine(self)
+            self.sanitize_reports.append(report)
+            self._sanitize_verdict(report)
+        items = self._drain_order(schedule)
         if not items:
             return sim.ChannelSimResult(
                 per_channel=[], aggregate=sim.SimResult(0, 0, 0, 0, 0))
@@ -408,7 +484,7 @@ class IDMAEngine:
                 stream_beats.append(None)
         result = sim.simulate_channels(
             streams, self.sim_config, (self.src_system, self.dst_system),
-            already_legal=True, beats=stream_beats)
+            already_legal=True, beats=stream_beats, tie_seed=tie_seed)
         self.last_channel_result = result
 
         def span_cycle(tid0: int) -> int:
@@ -572,6 +648,17 @@ class IDMAEngine:
         pc = self.plan_cache
         if pc is not None:
             if self._plannable:
+                if self.sanitize:
+                    # audit the hit (if any) *before* serving it: rebind
+                    # the frozen plan to this submission's addresses and
+                    # compare against a from-scratch lowering (P0xx)
+                    from repro.sanitize import audit_replay
+                    report = audit_replay(pc, transfer,
+                                          bus_width=self.bus_width,
+                                          pipeline=self.pipeline)
+                    if report is not None:
+                        self.sanitize_reports.append(report)
+                        self._sanitize_verdict(report)
                 if isinstance(transfer, NdTransfer):
                     legal, plan = pc.replay_nd(transfer,
                                                bus_width=self.bus_width,

@@ -23,14 +23,13 @@ RTL is), while everything downstream is purely functional.
 from __future__ import annotations
 
 import struct
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .descriptor import (CODE_PROTO, PROTO_CODE, BackendOptions,
-                         DescriptorBatch, NdTransfer, Protocol, TensorDim,
-                         Transfer1D)
+from .descriptor import (CODE_PROTO, PROTO_CODE, DescriptorBatch, NdTransfer,
+                         Protocol, TensorDim, Transfer1D)
 
 # ---------------------------------------------------------------------------
 # Register-file front-end

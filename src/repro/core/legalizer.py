@@ -29,8 +29,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .descriptor import (CODE_PROTO, GENERATOR_PROTOCOLS, BackendOptions,
-                         DescriptorBatch, Protocol, Transfer1D)
+from .descriptor import (CODE_PROTO, GENERATOR_PROTOCOLS, DescriptorBatch,
+                         Protocol, Transfer1D)
 
 PAGE_SIZE = 4096          # AXI 4 KiB page rule
 AXI_MAX_BEATS = 256       # AXI4 burst cap in beats

@@ -32,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -654,6 +654,7 @@ def simulate_channels(
                 Sequence[Tuple[MemSystem, MemSystem]]],
     already_legal: bool = False,
     beats: Optional[Sequence[Optional[np.ndarray]]] = None,
+    tie_seed: Optional[int] = None,
 ) -> ChannelSimResult:
     """Concurrent multi-channel transport model (event-driven).
 
@@ -676,6 +677,14 @@ def simulate_channels(
     captured-plan replay entry point, as on `simulate_batch`); entries may
     be ``None`` per channel and the whole argument only applies with
     `already_legal=True`.
+
+    `tie_seed` — adversarial tie-breaking for the sanitizer's differential
+    mode: heap ties (equal lower bounds) break on a seeded permutation of
+    the channel indices instead of channel order.  This perturbs *grant
+    order only* — per-channel burst FIFOs and the functional fabric are
+    untouched, so bytes never depend on it; cycle counts may shift under
+    endpoint contention.  ``None`` keeps the default (behavior-identical:
+    ties break on channel index).
     """
     n_ch = len(batches)
     cfgs = ([cfg] * n_ch if isinstance(cfg, EngineConfig) else list(cfg))
@@ -711,14 +720,19 @@ def simulate_channels(
         channels.append(_ChannelState(c, batch, useful, cfgs[c], rd, wr,
                                       beats=ch_beats))
 
-    heap = [(ch.lower_bound(), ch.idx) for ch in channels if ch.n]
+    if tie_seed is None:
+        order = np.arange(n_ch)
+    else:
+        order = np.random.default_rng(tie_seed).permutation(n_ch)
+    heap = [(ch.lower_bound(), int(order[ch.idx]), ch.idx)
+            for ch in channels if ch.n]
     heapq.heapify(heap)
     while heap:
-        _, c = heapq.heappop(heap)
+        _, _, c = heapq.heappop(heap)
         ch = channels[c]
         ch.grant()
         if ch.i < ch.n:
-            heapq.heappush(heap, (ch.lower_bound(), c))
+            heapq.heappush(heap, (ch.lower_bound(), int(order[c]), c))
 
     per = [ch.result() for ch in channels]
     if per:

@@ -39,10 +39,8 @@ cache on and off.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import (Callable, Dict, Hashable, List, Optional, Sequence,
-                    Tuple, Union)
+from typing import Callable, Dict, Hashable, List, Optional, Tuple, Union
 
 from .descriptor import (DescriptorBatch, NdTransfer, Protocol, RtConfig,
                          concat_batches)
@@ -485,14 +483,18 @@ class EngineSpec:
 
 def build_engine(spec: EngineSpec,
                  mem: Optional["MemoryMap"] = None,
-                 plan_cache: Union[None, bool, int, PlanCache] = None
+                 plan_cache: Union[None, bool, int, PlanCache] = None,
+                 sanitize: Union[bool, str] = False,
                  ) -> IDMAEngine:
     """Instantiate an `IDMAEngine` from a validated `EngineSpec`.
 
     ``mem``        — explicit `MemoryMap` (overrides ``spec.mem_spaces``);
     ``plan_cache`` — override the spec's plan-cache choice: ``None`` keeps
     the spec default, ``False`` disables, ``True``/int builds a fresh
-    `PlanCache`, an existing `PlanCache` is shared as-is.
+    `PlanCache`, an existing `PlanCache` is shared as-is;
+    ``sanitize``   — opt into the `repro.sanitize` static analyzer on
+    every drain (``True``/``"raise"`` raises `SanitizeError` on a hazard,
+    ``"warn"`` warns and drains anyway).
     """
     from .backend import MemoryMap
     if mem is None and spec.mem_spaces:
@@ -522,6 +524,7 @@ def build_engine(spec: EngineSpec,
         channel_boundary=spec.channels.boundary,
         plan_cache=cache,
         irq=spec.irq,
+        sanitize=sanitize,
     )
     eng._spec = spec
     return eng

@@ -18,8 +18,6 @@ import collections
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import NdTransfer, RtConfig, TensorDim

@@ -22,7 +22,6 @@ from __future__ import annotations
 import math
 from typing import List
 
-import numpy as np
 
 from repro.core.descriptor import Transfer1D
 

@@ -36,7 +36,7 @@ non-associative floats.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -140,7 +140,8 @@ class CollectiveFabric:
                  channels: int = 1, spec: Optional[EngineSpec] = None,
                  plan_cache=None, error_policy: Optional[ErrorPolicy] = None,
                  fault_sites: Optional[Dict[int, Sequence]] = None,
-                 max_burst: Optional[int] = 256) -> None:
+                 max_burst: Optional[int] = 256,
+                 sanitize: bool = False) -> None:
         if world < 1:
             raise ValueError("collective fabric needs world >= 1")
         if spec is None:
@@ -165,6 +166,14 @@ class CollectiveFabric:
             self.engines[rank].fault_injector = FaultInjector(sites)
         for rank, eng in enumerate(self.engines):
             eng.on_complete(self._completion_handler(rank))
+        #: opt-in phase-schedule certification (`repro.sanitize`): every
+        #: phase's rank→batch map is swept for cross-engine hazards
+        #: (H006 — two engines touching overlapping bytes with no
+        #: intra-phase ordering) before any byte moves; a flagged phase
+        #: raises `SanitizeError`.  Per-phase reports accumulate on
+        #: ``sanitize_reports`` (one per phase, in schedule order).
+        self.sanitize = bool(sanitize)
+        self.sanitize_reports: List[object] = []
         # phase-advance state driven by the completion interrupts
         self._pending: Optional[set] = None
         self._schedule = None
@@ -286,6 +295,15 @@ class CollectiveFabric:
             cur = self._next
             while cur is not None:
                 name, subs, self._hook = cur
+                if self.sanitize:
+                    from repro.sanitize import SanitizeError, check_phase
+                    report = check_phase(
+                        {r: b for r, b in subs.items()
+                         if b is not None and len(b)},
+                        pipeline=self.spec.midend)
+                    self.sanitize_reports.append((name, report))
+                    if not report.clean:
+                        raise SanitizeError(report)
                 ranks: List[int] = []
                 streams: List[DescriptorBatch] = []
                 beats: List[Optional[np.ndarray]] = []

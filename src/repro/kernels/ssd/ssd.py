@@ -21,7 +21,6 @@ Grid: (B, H, S/L) — chunks sequential innermost.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

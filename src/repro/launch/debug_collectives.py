@@ -44,7 +44,6 @@ def main():
     comps, entry = parse_module(hlo)
 
     # multipliers (same walk as hlo_cost, simplified)
-    from repro.launch.hlo_cost import analyze_hlo
     mult = {entry: 1.0}
     order = [entry]
     seen = set()

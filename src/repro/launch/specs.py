@@ -8,7 +8,6 @@ function to lower and its (args, in_shardings, out_shardings).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -19,7 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, RunConfig, ShapeSpec
 from repro.dist import sharding as shd
-from repro.models import init_decode_cache, lm_decode_step, lm_prefill
+from repro.models import init_decode_cache
 from repro.models.encdec import init_encdec_cache
 from repro.serve.serve_step import make_decode_step, make_prefill_step
 from repro.train.train_step import init_train_state, make_train_step
@@ -221,16 +220,18 @@ def _prefill_cell(cfg, shape, mesh, rcfg, con) -> Cell:
     prefill = make_prefill_step(cfg, rcfg, max_len=shape.seq_len)
 
     if cfg.family == "audio":
-        fn = lambda params, frames, tokens: prefill(params, frames, tokens)
+        def fn(params, frames, tokens):
+            return prefill(params, frames, tokens)
         args = (params_shapes, batch["frames"], batch["tokens"])
         in_sh = (p_sh, batch_sh["frames"], batch_sh["tokens"])
     elif cfg.family == "vlm":
-        fn = lambda params, tokens, pe: prefill(params, tokens,
-                                                patch_embeds=pe)
+        def fn(params, tokens, pe):
+            return prefill(params, tokens, patch_embeds=pe)
         args = (params_shapes, batch["tokens"], batch["patch_embeds"])
         in_sh = (p_sh, batch_sh["tokens"], batch_sh["patch_embeds"])
     else:
-        fn = lambda params, tokens: prefill(params, tokens)
+        def fn(params, tokens):
+            return prefill(params, tokens)
         args = (params_shapes, batch["tokens"])
         in_sh = (p_sh, batch_sh["tokens"])
     return Cell(name=f"{cfg.name}:{shape.name}", fn=fn, args=args,

@@ -14,7 +14,6 @@ import argparse
 import json
 import time
 
-import jax
 
 from repro.configs import get
 from repro.configs.base import RunConfig, reduced as reduce_cfg

@@ -11,7 +11,7 @@ prefill never materializes an (S, S) score matrix) — this is the path the
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,6 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
-from . import common
 from .common import Params, apply_rope, dense, dense_init, fold_keys
 
 NEG_INF = -1e30

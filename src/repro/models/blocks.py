@@ -11,7 +11,6 @@ with `lax.scan` over stacked params — HLO stays O(#segments).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

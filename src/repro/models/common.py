@@ -10,7 +10,7 @@ PartitionSpecs, so no sharding metadata lives here.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,14 +11,14 @@ Decode: self-attn KV cache + cross-attn K/V precomputed once per session
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, RunConfig
-from .common import (Params, dense, embed, embedding_init, fold_keys,
-                     rmsnorm, rmsnorm_init, unembed, dense_init)
+from .common import (Params, dense, embed, embedding_init, fold_keys, rmsnorm,
+                     rmsnorm_init, dense_init)
 from .attention import (attention_decode_step, attention_forward, cross_kv,
                         init_attention)
 from .ffn import ffn_forward, init_ffn

@@ -3,12 +3,10 @@
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, RunConfig
 from repro.dist.sharding import hint
 from .common import Params, activate, dense, dense_init, fold_keys
 

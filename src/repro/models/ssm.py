@@ -13,12 +13,12 @@ O(1) per token, which is why mamba2/hymba run the `long_500k` cell.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, RunConfig, SSMConfig
+from repro.configs.base import ArchConfig, RunConfig
 from repro.kernels.ssd.ops import ssd as ssd_op
 from .common import Params, dense, dense_init, fold_keys, rmsnorm, \
     rmsnorm_init, truncated_normal

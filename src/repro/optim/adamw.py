@@ -5,14 +5,16 @@ here is placement-agnostic)."""
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
 def adamw_init(params) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return {
         "mu": jax.tree_util.tree_map(zeros, params),
         "nu": jax.tree_util.tree_map(zeros, params),

@@ -6,16 +6,14 @@ functions are jit'd with the decode shardings from `dist.sharding`.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, RunConfig
-from repro.models import init_decode_cache
 from .serve_step import (greedy_sample, make_decode_step,
                          make_prefill_step, temperature_sample)
 

@@ -9,16 +9,14 @@ KV streaming.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, RunConfig
-from repro.models import (init_decode_cache, lm_decode_step, lm_prefill)
-from repro.models.encdec import (encdec_decode_step, encdec_prepare_cross,
-                                 init_encdec_cache)
+from repro.models import lm_decode_step, lm_prefill
+from repro.models.encdec import encdec_decode_step, encdec_prepare_cross
 
 
 def make_prefill_step(cfg: ArchConfig, rcfg: RunConfig,

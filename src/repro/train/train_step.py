@@ -12,9 +12,7 @@ microbatches scanned sequentially (activation memory / #microbatches).
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

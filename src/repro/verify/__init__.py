@@ -15,20 +15,33 @@ read errors recovered by replay, persistent faults driving
 replay-exhaustion / abort / continue, and mid-transfer channel stalls
 surfaced as backoff cycles.
 
+The `adversary` module differentially validates `repro.sanitize`'s
+static hazard verdicts: sanitizer-clean programs must be byte-identical
+under every adversarial drain schedule, and the deliberately-racy
+program family (`generator.generate_racy_program`) must be flagged with
+the expected code *and* observably diverge.
+
 Run it:
 
     python -m repro.verify --seeds 200
+    python -m repro.verify --seeds 200 --differential
 """
 
-from .generator import (FAMILIES, Program, Row, Submission,
-                        generate_program, fill_mem)
+from .adversary import (SCHEDULES, benign_same_value, check_differential,
+                        check_racy_program, check_racy_seed, run_bytes,
+                        sanitize_verdict)
+from .generator import (FAMILIES, RACY_KINDS, Program, Row, Submission,
+                        generate_program, generate_racy_program, fill_mem)
 from .harness import (Divergence, EngineRun, check_program, run_engine,
                       run_oracle)
 from .shrink import shrink_program
 
 __all__ = [
-    "FAMILIES", "Program", "Row", "Submission", "generate_program",
-    "fill_mem",
+    "FAMILIES", "RACY_KINDS", "Program", "Row", "Submission",
+    "generate_program", "generate_racy_program", "fill_mem",
     "Divergence", "EngineRun", "check_program", "run_engine", "run_oracle",
     "shrink_program",
+    "SCHEDULES", "benign_same_value", "check_differential",
+    "check_racy_program", "check_racy_seed", "run_bytes",
+    "sanitize_verdict",
 ]

@@ -11,39 +11,67 @@ from __future__ import annotations
 import argparse
 import sys
 
+from .adversary import check_differential, check_racy_program
 from .collective import (check_collective_program,
                          generate_collective_program,
                          shrink_collective_program)
-from .generator import FAMILIES, generate_program
+from .generator import FAMILIES, generate_program, generate_racy_program
 from .harness import check_program
 from .shrink import shrink_program
 
 #: the full family rotation: every engine family from the generator plus
-#: the multi-engine collective-fabric family (seed % len picks one)
-ALL_FAMILIES = FAMILIES + ("collective",)
+#: the multi-engine collective-fabric family and the deliberately-racy
+#: sanitizer-validation family (seed % len picks one)
+ALL_FAMILIES = FAMILIES + ("collective", "racy")
 
 
-def _run_one(seed, family):
+def _run_one(seed, family, differential=False):
     """Generate + check one seed; returns (program, divergence, shrinker).
     ``seed % len(ALL_FAMILIES)`` rotates through the scalar-oracle engine
-    families AND the multi-engine collective family."""
-    fam = family or ALL_FAMILIES[seed % len(ALL_FAMILIES)]
+    families AND the multi-engine collective family AND the racy family
+    (whose check is the sanitizer contract, not the scalar oracle).
+
+    ``differential`` swaps the oracle check for the sanitizer's
+    schedule-invariance contract (`adversary.check_differential`) on the
+    engine families; the rotation then skips collectives (no drain
+    schedule to permute) and racy programs keep their own contract.
+    """
+    rotation = (FAMILIES + ("racy",)) if differential else ALL_FAMILIES
+    fam = family or rotation[seed % len(rotation)]
     if fam == "collective":
         program = generate_collective_program(seed)
         return program, check_collective_program(program), \
             shrink_collective_program
+    if fam == "racy":
+        program, expected = generate_racy_program(seed)
+
+        def check_racy(p, expected=expected):
+            return check_racy_program(p, expected)
+
+        def shrink_racy(p, d, budget=200):
+            return shrink_program(p, d, budget=budget, check=check_racy)
+
+        return program, check_racy(program), shrink_racy
     program = generate_program(seed, family=fam)
+    if differential:
+
+        def shrink_diff(p, d, budget=200):
+            return shrink_program(p, d, budget=budget,
+                                  check=check_differential)
+
+        return program, check_differential(program), shrink_diff
     return program, check_program(program), shrink_program
 
 
 def run_seeds(seeds, family=None, do_shrink=True, fail_fast=False,
-              log=print):
+              log=print, differential=False):
     """Exercise every seed; returns (stats dict, list of divergences)."""
     totals = {"programs": 0, "submissions": 0, "rows": 0, "faults": 0,
               "collectives": 0}
     divergences = []
     for seed in seeds:
-        program, d, shrinker = _run_one(seed, family)
+        program, d, shrinker = _run_one(seed, family,
+                                        differential=differential)
         totals["programs"] += 1
         totals["rows"] += program.num_rows
         if hasattr(program, "submissions"):
@@ -82,10 +110,16 @@ def main(argv=None) -> int:
                         help="stop at the first divergence")
     parser.add_argument("--no-shrink", action="store_true",
                         help="report divergences without shrinking")
+    parser.add_argument("--differential", action="store_true",
+                        help="check the sanitizer contract (clean programs"
+                             " are drain-schedule-invariant; racy-family"
+                             " programs are flagged and diverge) instead"
+                             " of the scalar-oracle equivalences")
     args = parser.parse_args(argv)
 
     if args.replay is not None:
-        program, d, shrinker = _run_one(args.replay, args.family)
+        program, d, shrinker = _run_one(args.replay, args.family,
+                                        differential=args.differential)
         print(program.describe())
         if d is None:
             print(f"seed {args.replay}: PASS")
@@ -100,7 +134,7 @@ def main(argv=None) -> int:
     seeds = range(args.start, args.start + args.seeds)
     totals, divergences = run_seeds(
         seeds, family=args.family, do_shrink=not args.no_shrink,
-        fail_fast=args.fail_fast)
+        fail_fast=args.fail_fast, differential=args.differential)
     print(f"{totals['programs']} programs "
           f"({totals['submissions']} submissions, {totals['rows']} rows, "
           f"{totals['faults']} fault sites): "

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -424,3 +424,109 @@ def generate_program(seed: int, family: Optional[str] = None) -> Program:
     return Program(seed=seed, family=fam, spec=spec,
                    submissions=submissions, fault_sites=fault_sites,
                    mem_seed=int(rng.integers(0, 1 << 31)))
+
+
+# --------------------------------------------------------------------------
+# Racy family — programs the sanitizer MUST flag
+# --------------------------------------------------------------------------
+
+#: deliberately hazardous program shapes, indexed by ``seed % len(...)``.
+#: Each kind carries a *guaranteed-divergence* construction: the flagged
+#: hazard provably changes observable bytes (cross-channel kinds under an
+#: adversarial drain schedule; ``intra-raw`` between the engine's binned
+#: vectorized execution and the scalar oracle's row-sequential one).
+#: Kinds whose outcome the engine and oracle can legitimately agree on
+#: (intra-submission WAW — numpy scatter is last-row-wins, same as
+#: sequential; intra-row src/dst overlap — both paths prefetch the full
+#: source) are deliberately absent.
+RACY_KINDS: Tuple[str, ...] = ("cross-ww", "cross-rw", "dispatch-ww",
+                               "intra-raw")
+
+#: the diagnostic code `repro.sanitize.check_engine` must report per kind
+RACY_EXPECT: Dict[str, str] = {
+    "cross-ww": "H003",
+    "cross-rw": "H003",
+    "dispatch-ww": "H003",
+    "intra-raw": "H001",
+}
+
+
+def _racy_spec(seed: int, channels: int) -> EngineSpec:
+    """A deliberately plain host spec for the racy rows: one AXI4 space,
+    default policy, no mid-end, no faults — the *only* interesting thing
+    about a racy program is its hazard."""
+    return EngineSpec(
+        name=f"racy_{seed}",
+        backend=BackendSpec(protocols=(Protocol.AXI4,)),
+        channels=ChannelSpec(count=channels),
+        mem_spaces=((Protocol.AXI4, 64 << 10),),
+    )
+
+
+def generate_racy_program(seed: int) -> Tuple[Program, str]:
+    """The deterministic racy program for ``seed``.
+
+    Returns ``(program, expected_code)`` — the sanitizer must flag the
+    program with ``expected_code``, and `repro.verify.adversary` must
+    observe actual byte divergence (or classify the overlap as a benign
+    same-value write, which seeded random fill makes vanishingly rare).
+    """
+    kind = RACY_KINDS[seed % len(RACY_KINDS)]
+    rng = np.random.default_rng(np.random.SeedSequence([0x7ACE, seed]))
+    proto = Protocol.AXI4
+    space = 64 << 10
+    half = space // 2
+
+    # Every address is 512-aligned and every length is a multiple of 8
+    # capped at 256 B, so no row ever straddles a 4 KiB page: the
+    # legalizer emits exactly one burst per row, and same-length rows
+    # land in the same vectorized execution bin — which is what makes
+    # the intra-raw kind's engine-vs-oracle divergence a *guarantee*
+    # rather than an alignment accident.
+    length = int(rng.integers(4, 33)) * 8
+    # victim window W in the upper half, with headroom for cross-rw's
+    # reader destination at w + 4 * length
+    w = half + int(rng.integers(0, half // 512 - 4)) * 512
+    delta = int(rng.integers(1, length // 8)) * 8
+    # disjoint sources in the lower half
+    src_a = int(rng.integers(0, half // 2 // 512)) * 512
+    src_b = (half // 2) + int(rng.integers(0, half // 2 // 512 - 1)) * 512
+
+    def row(src: int, dst: int, n: int = length) -> Row:
+        return Row(src=src, dst=dst, length=n, src_proto=proto,
+                   dst_proto=proto)
+
+    if kind == "cross-ww":
+        # two async singles land on channels 0 and 1 (round-robin) and
+        # write overlapping windows — drain order decides the bytes
+        subs = [Submission(kind="single", rows=(row(src_a, w),)),
+                Submission(kind="single", rows=(row(src_b, w + delta),))]
+        channels = 2
+    elif kind == "cross-rw":
+        # channel 0 writes W while channel 1 reads a window overlapping W
+        # (into a disjoint destination) — drain order decides whether the
+        # reader sees pre- or post-write bytes
+        rd_dst = w + 4 * length
+        subs = [Submission(kind="single", rows=(row(src_a, w),)),
+                Submission(kind="single", rows=(row(w + delta, rd_dst),))]
+        channels = 2
+    elif kind == "dispatch-ww":
+        # one dispatch_batch sharded round-robin across two channels:
+        # rows 0 and 1 write overlapping windows from different channels
+        subs = [Submission(kind="batch",
+                           rows=(row(src_a, w), row(src_b, w + delta)))]
+        channels = 2
+    else:   # intra-raw
+        # one single-channel batch: row 1 reads bytes row 0 writes.  The
+        # rows share a length, so the engine's binned execution gathers
+        # both sources before either scatter — the scalar oracle's
+        # row-sequential semantics read row 0's output instead.
+        subs = [Submission(kind="batch",
+                           rows=(row(src_a, w), row(w + delta, src_b)))]
+        channels = 1
+
+    program = Program(seed=seed, family="racy",
+                      spec=_racy_spec(seed, channels),
+                      submissions=subs, fault_sites=[],
+                      mem_seed=int(rng.integers(0, 1 << 31)))
+    return program, RACY_EXPECT[kind]

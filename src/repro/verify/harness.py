@@ -97,9 +97,15 @@ def _enqueue(engine, program: Program) -> None:
 
 
 def run_engine(program: Program, plan_cache=False,
-               irq_override: Optional[IrqSpec] = None) -> EngineRun:
+               irq_override: Optional[IrqSpec] = None,
+               schedule=None, tie_seed: Optional[int] = None) -> EngineRun:
     """Execute the program on a real engine; drain to completion, one
-    `wait_all` round per propagated error."""
+    `wait_all` round per propagated error.
+
+    ``schedule``/``tie_seed`` forward to `IDMAEngine.wait_all` — the
+    adversarial drain permutation and timing tie-break the sanitizer's
+    differential contract is validated under (`repro.verify.adversary`).
+    """
     spec = program.spec
     if irq_override is not None:
         spec = dataclasses.replace(spec, irq=irq_override)
@@ -122,7 +128,7 @@ def run_engine(program: Program, plan_cache=False,
             raise RuntimeError(
                 f"drain did not converge for seed {program.seed}")
         try:
-            res = engine.wait_all()
+            res = engine.wait_all(schedule=schedule, tie_seed=tie_seed)
         except TransferError as err:
             errors.append(_err_key(err))
             res = engine.last_channel_result

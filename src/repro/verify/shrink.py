@@ -16,17 +16,19 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Tuple
 
-from .generator import Program, Row, Submission
+from .generator import Program, Row
 from .harness import Divergence, check_program
 
 
 def _still_fails(program: Program, kind: str,
-                 spent: List[int], budget: int) -> Optional[Divergence]:
+                 spent: List[int], budget: int,
+                 check: Callable[[Program], Optional[Divergence]]
+                 = check_program) -> Optional[Divergence]:
     if spent[0] >= budget:
         return None
     spent[0] += 1
     try:
-        d = check_program(program)
+        d = check(program)
     except Exception:        # a reduced program must still *run*
         return None
     if d is not None and d.kind == kind:
@@ -35,7 +37,9 @@ def _still_fails(program: Program, kind: str,
 
 
 def _ddmin(items: list, rebuild: Callable[[list], Program], kind: str,
-           spent: List[int], budget: int) -> list:
+           spent: List[int], budget: int,
+           check: Callable[[Program], Optional[Divergence]]
+           = check_program) -> list:
     """Classic ddmin: drop chunks (halving granularity) while the rebuilt
     program still diverges with the same kind."""
     chunk = max(1, len(items) // 2)
@@ -44,7 +48,8 @@ def _ddmin(items: list, rebuild: Callable[[list], Program], kind: str,
         reduced = False
         while i < len(items):
             trial = items[:i] + items[i + chunk:]
-            if trial and _still_fails(rebuild(trial), kind, spent, budget):
+            if trial and _still_fails(rebuild(trial), kind, spent, budget,
+                                      check):
                 items = trial
                 reduced = True
             else:
@@ -55,10 +60,16 @@ def _ddmin(items: list, rebuild: Callable[[list], Program], kind: str,
 
 
 def shrink_program(program: Program, failure: Divergence,
-                   budget: int = 200) -> Tuple[Program, Divergence]:
+                   budget: int = 200,
+                   check: Callable[[Program], Optional[Divergence]]
+                   = check_program) -> Tuple[Program, Divergence]:
     """Reduce `program` to a minimal reproducer of ``failure.kind``.
 
     Returns the smallest program found and its (re-verified) divergence.
+    ``check`` is the oracle that decides whether a reduced program still
+    fails — the default is the full differential `check_program`; the
+    sanitizer's racy-program path passes a closure over
+    `repro.verify.adversary.check_racy_program` instead.
     """
     kind = failure.kind
     spent = [0]
@@ -69,8 +80,9 @@ def shrink_program(program: Program, failure: Divergence,
         return dataclasses.replace(best, submissions=list(subs))
 
     # 1. whole submissions
-    subs = _ddmin(list(best.submissions), with_subs, kind, spent, budget)
-    d = _still_fails(with_subs(subs), kind, spent, budget)
+    subs = _ddmin(list(best.submissions), with_subs, kind, spent,
+                  budget, check)
+    d = _still_fails(with_subs(subs), kind, spent, budget, check)
     if d is not None:
         best = with_subs(subs)
         best_d = d
@@ -85,8 +97,9 @@ def shrink_program(program: Program, failure: Divergence,
             subs[si] = dataclasses.replace(sub, rows=tuple(rows))
             return dataclasses.replace(best, submissions=subs)
 
-        rows = _ddmin(list(sub.rows), with_rows, kind, spent, budget)
-        d = _still_fails(with_rows(rows), kind, spent, budget)
+        rows = _ddmin(list(sub.rows), with_rows, kind, spent,
+                      budget, check)
+        d = _still_fails(with_rows(rows), kind, spent, budget, check)
         if d is not None:
             best = with_rows(rows)
             best_d = d
@@ -101,7 +114,8 @@ def shrink_program(program: Program, failure: Divergence,
         i = 0
         while i < len(sites):
             trial = sites[:i] + sites[i + 1:]
-            d = _still_fails(with_sites(trial), kind, spent, budget)
+            d = _still_fails(with_sites(trial), kind, spent, budget,
+                             check)
             if d is not None:
                 sites = trial
                 best = with_sites(sites)
@@ -122,7 +136,7 @@ def shrink_program(program: Program, failure: Divergence,
                 subs[si] = dataclasses.replace(
                     dataclasses.replace(sub), rows=tuple(rows))
                 trial = dataclasses.replace(best, submissions=subs)
-                d = _still_fails(trial, kind, spent, budget)
+                d = _still_fails(trial, kind, spent, budget, check)
                 if d is not None:
                     best = trial
                     best_d = d

@@ -1,7 +1,5 @@
 """HLO cost-parser validation: trip-weighted flops vs analytical counts."""
 
-import numpy as np
-import pytest
 
 
 class TestParser:

@@ -35,7 +35,8 @@ class TestCopyEngine:
     def test_instream_transform_fused(self):
         from repro.kernels.copy_engine import copy_2d, copy_2d_ref
         x = arr((64, 256))
-        t = lambda v: v * 3.0 + 1.0
+        def t(v):
+            return v * 3.0 + 1.0
         y = copy_2d(x, transform=t, backend="pallas", interpret=True)
         allclose(y, copy_2d_ref(x, t))
 
@@ -67,7 +68,8 @@ class TestCopyEngine:
         leg — invert twice is identity, invert once is not."""
         from repro.kernels.copy_engine import copy_2d_reference
         x = np.asarray(arr((64, 256)), np.float32)
-        inv = lambda b: 255 - b
+        def inv(b):
+            return 255 - b
         once = copy_2d_reference(x, instream=inv)
         assert not np.array_equal(once, x)
         twice = copy_2d_reference(once, instream=inv)

@@ -1,12 +1,10 @@
 """Mid-end tests: tensor_nd / mp_split / mp_dist / rt_3D (paper §2.2)."""
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (NdTransfer, RtConfig, TensorDim, Transfer1D,
-                        coalesce_nd, mp_dist, mp_dist_tree, mp_split,
-                        rt_schedule, split_and_distribute, tensor_nd,
-                        total_bytes)
+from repro.core import (NdTransfer, RtConfig, TensorDim, Transfer1D, mp_dist,
+                        mp_dist_tree, mp_split, rt_schedule,
+                        split_and_distribute, tensor_nd, total_bytes)
 from repro.core.midend import no_boundary_crossing, preserves_bytes
 
 

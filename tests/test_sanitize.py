@@ -1,0 +1,427 @@
+"""Static sanitizer: hazard sweep, spec lint, plan audit, and the
+opt-in engine / collective-fabric wiring.
+
+The hazard matrix here is the ordering model's ground truth: every code
+gets a minimal crafted program, and the FIFO-allowed / cross-protocol /
+generator-source negative cases pin down what must *not* be flagged.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DescriptorBatch, ErrorPolicy, Protocol,
+                        build_engine, make_fragmented_batch, preset)
+from repro.core.descriptor import NdTransfer, Transfer1D
+from repro.core.spec import (PRESETS, BackendSpec, ChannelSpec, EngineSpec,
+                             IrqSpec)
+from repro.sanitize import (CODES, Report, SanitizeError, Unit, audit_replay,
+                            as_batch, channel_units, check_batch, check_phase,
+                            check_spec, check_units, severity)
+
+
+def rows(*triples, src_p=Protocol.AXI4, dst_p=Protocol.AXI4):
+    """Build a batch from (src, dst, length) triples."""
+    s, d, ln = (np.asarray(c, dtype=np.int64) for c in zip(*triples))
+    return DescriptorBatch.from_arrays(s, d, ln, src_protocol=src_p,
+                                       dst_protocol=dst_p)
+
+
+def spec2ch(channels=2, name="t"):
+    return EngineSpec(
+        name=name,
+        backend=BackendSpec(protocols=(Protocol.AXI4,)),
+        channels=ChannelSpec(count=channels),
+        mem_spaces=((Protocol.AXI4, 1 << 16),))
+
+
+# --------------------------------------------------------------------------
+# Hazard sweep: the classification matrix
+# --------------------------------------------------------------------------
+
+class TestSweepMatrix:
+    def test_disjoint_rows_clean(self):
+        r = check_batch(rows((0, 0x1000, 64), (0x100, 0x2000, 64)))
+        assert r.clean and r.codes == () and r.checked_rows == 2
+
+    def test_h001_read_after_write(self):
+        # row 0 writes [0x1000,0x1040), row 1 reads it: the vectorized
+        # batch path gives no intra-item ordering, so the read races
+        r = check_batch(rows((0, 0x1000, 64), (0x1000, 0x3000, 64)))
+        assert r.codes == ("H001",)
+        d = r.select("H001")[0]
+        assert d.window == (0x1000, 0x1040)
+        assert d.a.op == "write" and d.b.op == "read"
+
+    def test_h004_write_after_read(self):
+        r = check_batch(rows((0x1000, 0x3000, 64), (0, 0x1000, 64)))
+        assert r.codes == ("H004",)
+
+    def test_h002_write_after_write(self):
+        r = check_batch(rows((0, 0x1000, 64), (0x100, 0x1020, 64)))
+        assert r.codes == ("H002",)
+        assert r.select("H002")[0].window == (0x1020, 0x1040)
+
+    def test_h005_self_overlap(self):
+        r = check_batch(rows((0x1000, 0x1020, 64)))
+        assert r.codes == ("H005",)
+
+    def test_h003_cross_channel(self):
+        units = [Unit(rows((0, 0x1000, 64)), channel=0, item=0),
+                 Unit(rows((0x100, 0x1020, 64)), channel=1, item=1)]
+        assert check_units(units).codes == ("H003",)
+
+    def test_same_channel_fifo_allowed(self):
+        # same engine, same channel, different queue items: FIFO drains
+        # them in order — overlap is a legal dependence, not a hazard
+        units = [Unit(rows((0, 0x1000, 64)), channel=0, item=0),
+                 Unit(rows((0x100, 0x1020, 64)), channel=0, item=1)]
+        assert check_units(units).clean
+
+    def test_h006_cross_engine(self):
+        r = check_phase([rows((0, 0x1000, 64)), rows((0x100, 0x1020, 64))])
+        assert r.codes == ("H006",)
+        # dict form (rank -> batch) is equivalent
+        r2 = check_phase({0: rows((0, 0x1000, 64)),
+                          1: rows((0x100, 0x1020, 64))})
+        assert r2.codes == ("H006",)
+
+    def test_cross_protocol_never_collides(self):
+        units = [Unit(rows((0, 0x1000, 64), dst_p=Protocol.AXI4)),
+                 Unit(rows((0, 0x1000, 64), dst_p=Protocol.OBI),
+                      item=1)]
+        assert check_units(units).clean
+
+    def test_mixed_protocol_rows_within_one_batch(self):
+        # per-row protocol columns force the sweep's flat fallback path
+        b = DescriptorBatch.from_arrays(
+            np.asarray([0, 0x100], np.int64),
+            np.asarray([0x1000, 0x1020], np.int64),
+            np.asarray([64, 64], np.int64),
+            src_proto=np.asarray([2, 3], np.uint8),
+            dst_proto=np.asarray([2, 2], np.uint8))
+        assert "H002" in check_batch(b).codes
+
+    def test_generator_source_has_no_read_interval(self):
+        # INIT source "reading" the bytes another row writes is fine —
+        # a pattern generator touches no memory
+        b = DescriptorBatch.from_arrays(
+            np.asarray([0x1000, 0], np.int64),
+            np.asarray([0x1000, 0x3000], np.int64),
+            np.asarray([64, 64], np.int64),
+            src_protocol=Protocol.INIT, dst_protocol=Protocol.AXI4)
+        assert check_batch(b).clean
+
+    def test_zero_length_rows_ignored(self):
+        assert check_batch(rows((0, 0x1000, 0), (0, 0x1000, 0))).clean
+
+    def test_read_read_overlap_never_flagged(self):
+        # a million broadcast reads of one buffer are legal; here two
+        r = check_batch(rows((0x500, 0x1000, 64), (0x500, 0x2000, 64)))
+        assert r.clean
+
+    def test_touching_intervals_do_not_overlap(self):
+        # half-open intervals: [0x1000,0x1040) then [0x1040,0x1080)
+        assert check_batch(rows((0, 0x1000, 64), (0x100, 0x1040, 64))).clean
+
+
+class TestSweepControls:
+    def test_suppress_counts(self):
+        r = check_batch(rows((0x1000, 0x1020, 64)), suppress=("H005",))
+        assert r.clean and r.suppressed == {"H005": 1}
+
+    def test_unknown_suppress_code_rejected(self):
+        with pytest.raises(ValueError, match="unknown diagnostic code"):
+            check_batch(rows((0, 0x1000, 64)), suppress=("H999",))
+
+    def test_per_code_limit_with_note(self):
+        # 6 rows all writing one address: C(6,2)=15 H002 pairs, limit 3
+        b = rows(*[(i * 0x100, 0x1000, 64) for i in range(6)])
+        r = check_batch(b, limit=3)
+        assert len(r.select("H002")) == 3
+        assert any("more than 3 instances" in n for n in r.notes)
+
+    def test_budget_exhaustion_note(self):
+        b = rows(*[(i * 0x100, 0x1000, 64) for i in range(8)])
+        r = check_batch(b, budget=4)
+        assert any("budget exhausted" in n for n in r.notes)
+
+    def test_fragmented_batch_needs_h005_suppression(self):
+        # §4.4 fragmented copy is a deliberate src==dst identity stream
+        b = make_fragmented_batch(1 << 12, 67)
+        assert check_batch(b).has("H005")
+        r = check_batch(b, suppress=("H005",))
+        assert r.clean and r.suppressed["H005"] == len(b)
+
+    def test_report_format_and_merge(self):
+        r = check_batch(rows((0, 0x1000, 64), (0x100, 0x1020, 64)))
+        text = r.format()
+        assert "HAZARDOUS" in text and "H002" in text
+        total = Report()
+        total.merge(r).merge(check_batch(rows((0, 0x7000, 64))))
+        assert total.checked_rows == 3 and total.codes == ("H002",)
+
+    def test_severity_model(self):
+        assert severity("H003") == "error"
+        assert severity("P001") == "error"
+        assert severity("S002") == "warning"
+        assert set(CODES) == {f"H00{i}" for i in range(1, 7)} | \
+            {f"S00{i}" for i in range(1, 6)} | {"P001", "P002"}
+
+    def test_warnings_keep_report_clean(self):
+        spec = spec2ch()
+        bad = EngineSpec(
+            name="warn", backend=spec.backend,
+            channels=ChannelSpec(count=1),
+            irq=IrqSpec(vectors=4),
+            mem_spaces=spec.mem_spaces)
+        r = check_spec(bad)
+        assert r.has("S004") and r.clean   # warnings never fail
+
+
+class TestPayloadNormalization:
+    def test_as_batch_transfer1d(self):
+        b = as_batch(Transfer1D(src_addr=0, dst_addr=0x100, length=32))
+        assert len(b) == 1 and int(b.length[0]) == 32
+
+    def test_as_batch_nd(self):
+        from repro.core.descriptor import TensorDim
+        nd = NdTransfer(src_addr=0, dst_addr=0x1000, inner_length=64,
+                        dims=(TensorDim(src_stride=256, dst_stride=64,
+                                        reps=4),))
+        b = as_batch(nd)
+        assert len(b) == 4
+        assert check_batch(b).clean
+
+    def test_as_batch_rejects_unknown(self):
+        with pytest.raises(TypeError, match="cannot sanitize"):
+            as_batch(object())
+
+    def test_channel_units_mirror_dispatch(self):
+        # round-robin over 2 channels puts the overlapping rows on
+        # different channels: exactly the engine's dispatch hazard
+        b = rows((0, 0x1000, 64), (0x100, 0x1020, 64))
+        units = channel_units(b, 2)
+        assert [u.channel for u in units] == [0, 1]
+        assert check_units(units).codes == ("H003",)
+
+
+# --------------------------------------------------------------------------
+# S-codes: spec misconfiguration lint
+# --------------------------------------------------------------------------
+
+class TestSpecCheck:
+    def test_presets_all_clean(self):
+        for name in PRESETS:
+            r = check_spec(preset(name))
+            assert not r.diagnostics, (name, r.codes)
+
+    def test_s003_port_without_backing_space(self):
+        spec = EngineSpec(
+            name="s3",
+            backend=BackendSpec(protocols=(Protocol.AXI4, Protocol.OBI)),
+            mem_spaces=((Protocol.AXI4, 1 << 14),))
+        assert check_spec(spec).has("S003")
+
+    def test_s004_excess_irq_vectors(self):
+        spec = EngineSpec(
+            name="s4", backend=BackendSpec(protocols=(Protocol.AXI4,)),
+            channels=ChannelSpec(count=2), irq=IrqSpec(vectors=5),
+            mem_spaces=((Protocol.AXI4, 1 << 14),))
+        assert check_spec(spec).has("S004")
+
+    def test_s005_replay_with_zero_budget(self):
+        spec = EngineSpec(
+            name="s5",
+            backend=BackendSpec(
+                protocols=(Protocol.AXI4,),
+                error_policy=ErrorPolicy(action="replay", max_replays=0)),
+            mem_spaces=((Protocol.AXI4, 1 << 14),))
+        assert check_spec(spec).has("S005")
+
+    def test_s002_plan_cache_multiport(self):
+        spec = EngineSpec(
+            name="s2",
+            backend=BackendSpec(protocols=(Protocol.AXI4,), num_ports=2,
+                                boundary=4096),
+            plan_cache=True,
+            mem_spaces=((Protocol.AXI4, 1 << 14),))
+        assert check_spec(spec).has("S002")
+
+
+# --------------------------------------------------------------------------
+# Engine wiring: sanitize= modes, drain check, plan audit
+# --------------------------------------------------------------------------
+
+def _submit_racy(engine):
+    engine.submit_async(Transfer1D(src_addr=0x0000, dst_addr=0x8000,
+                                   length=256))
+    engine.submit_async(Transfer1D(src_addr=0x1000, dst_addr=0x8080,
+                                   length=256))
+
+
+class TestEngineWiring:
+    def test_raise_mode_blocks_racy_drain(self):
+        engine = build_engine(spec2ch(), sanitize=True)
+        _submit_racy(engine)
+        with pytest.raises(SanitizeError) as err:
+            engine.wait_all()
+        assert err.value.report.codes == ("H003",)
+        assert len(engine.sanitize_reports) == 1
+
+    def test_warn_mode_drains_anyway(self):
+        engine = build_engine(spec2ch(), sanitize="warn")
+        _submit_racy(engine)
+        with pytest.warns(RuntimeWarning, match="H003"):
+            engine.wait_all()
+        assert not any(engine._queues)   # drained despite the finding
+
+    def test_clean_program_certified_and_drained(self):
+        engine = build_engine(spec2ch(), sanitize=True)
+        engine.submit_async(Transfer1D(src_addr=0, dst_addr=0x8000,
+                                       length=256))
+        engine.submit_async(Transfer1D(src_addr=0x1000, dst_addr=0x9000,
+                                       length=256))
+        engine.wait_all()
+        assert not any(engine._queues)
+        assert len(engine.sanitize_reports) == 1
+        assert engine.sanitize_reports[0].clean
+
+    def test_off_by_default(self):
+        engine = build_engine(spec2ch())
+        _submit_racy(engine)
+        engine.wait_all()    # no error: analysis is opt-in
+        assert engine.sanitize_reports == []
+
+    def test_invalid_mode_rejected(self):
+        with pytest.raises(ValueError, match="sanitize must be"):
+            build_engine(spec2ch(), sanitize="loud")
+
+    def test_same_channel_pipeline_not_flagged(self):
+        # FIFO dependence through one channel is legal on the engine too
+        engine = build_engine(spec2ch(channels=1), sanitize=True)
+        engine.submit_async(Transfer1D(src_addr=0, dst_addr=0x8000,
+                                       length=64))
+        engine.submit_async(Transfer1D(src_addr=0x8000, dst_addr=0x9000,
+                                       length=64))
+        engine.wait_all()
+        assert engine.sanitize_reports[0].clean
+
+
+class TestPlanAudit:
+    def _engine(self):
+        return build_engine(spec2ch(channels=1), plan_cache=True,
+                            sanitize=True)
+
+    def test_hit_is_audited_clean(self):
+        engine = self._engine()
+        engine.submit_async(Transfer1D(src_addr=0x0000, dst_addr=0x8000,
+                                       length=300))
+        engine.wait_all()
+        # congruent mod 4096 (the signature's structure modulus) -> hit
+        engine.submit_async(Transfer1D(src_addr=0x4000, dst_addr=0xC000,
+                                       length=300))
+        engine.wait_all()
+        assert engine.plan_cache.stats.hits == 1
+        audits = [r for r in engine.sanitize_reports if r.checked_rows == 1
+                  and not r.diagnostics]
+        assert audits, "expected a clean plan-audit report on the hit"
+
+    def test_tampered_plan_flagged_p001(self):
+        engine = self._engine()
+        engine.submit_async(Transfer1D(src_addr=0x0000, dst_addr=0x8000,
+                                       length=300))
+        engine.wait_all()
+        plan = next(iter(engine.plan_cache._plans.values()))
+        plan.length = plan.length.copy()
+        plan.length[0] += 8    # corrupt the frozen burst structure
+        with pytest.raises(SanitizeError) as err:
+            engine.submit_async(Transfer1D(src_addr=0x4000,
+                                           dst_addr=0xC000, length=300))
+            engine.wait_all()
+        assert err.value.report.has("P001")
+
+    def test_audit_replay_miss_returns_none(self):
+        engine = self._engine()
+        t = Transfer1D(src_addr=0, dst_addr=0x8000, length=300)
+        assert audit_replay(engine.plan_cache, t,
+                            bus_width=engine.bus_width) is None
+
+
+# --------------------------------------------------------------------------
+# Collective fabric phase certification
+# --------------------------------------------------------------------------
+
+class TestFabricCertification:
+    def _fabric(self):
+        from repro.dist.fabric import CollectiveFabric
+        return CollectiveFabric(4, region_bytes=1 << 14, channels=2,
+                                sanitize=True)
+
+    def test_all_four_collectives_certified(self):
+        x = np.arange(256, dtype=np.float32)
+        shards = [x + r for r in range(4)]
+        fab = self._fabric()
+        out, _ = fab.allgather(shards)
+        np.testing.assert_array_equal(out[0], np.stack(shards))
+        fab2 = self._fabric()
+        red, _ = fab2.allreduce(shards)
+        np.testing.assert_allclose(red[0], sum(shards))
+        fab3 = self._fabric()
+        fab3.alltoall([np.stack([x + 10 * r + c for c in range(4)])
+                       for r in range(4)])
+        fab4 = self._fabric()
+        base = [r * fab4.region_bytes for r in range(4)]
+        fab4.transport([DescriptorBatch.from_arrays(
+            np.asarray([b], np.int64), np.asarray([b + 4096], np.int64),
+            np.asarray([2048], np.int64),
+            src_protocol=fab4.proto, dst_protocol=fab4.proto)
+            for b in base])
+        for fab_i in (fab, fab2, fab3, fab4):
+            assert fab_i.sanitize_reports
+            for name, report in fab_i.sanitize_reports:
+                assert report.clean, (name, report.codes)
+
+    def test_corrupted_schedule_rejected(self):
+        # every rank writes rank 0's bytes: a cross-engine race
+        fab = self._fabric()
+        batches = [DescriptorBatch.from_arrays(
+            np.asarray([r * fab.region_bytes], np.int64),
+            np.asarray([0x100], np.int64),
+            np.asarray([512], np.int64),
+            src_protocol=fab.proto, dst_protocol=fab.proto)
+            for r in range(4)]
+        with pytest.raises(SanitizeError) as err:
+            fab.transport(batches)
+        assert err.value.report.has("H006")
+
+
+# --------------------------------------------------------------------------
+# In-repo program corpus + CLI
+# --------------------------------------------------------------------------
+
+class TestCorpusAndCli:
+    def test_kv_templates_certified(self):
+        from repro.serve.kvcache import (KVLayout, append_descriptors,
+                                         gather_descriptors)
+        layout = KVLayout(n_pages=64, page_size=16, n_kv_heads=4,
+                          head_dim=32)
+        table = np.random.default_rng(0).permutation(64)[:32] \
+            .reshape(8, 4).astype(np.int32)
+        assert check_batch(gather_descriptors(layout, table,
+                                              max_len=64)).clean
+        assert check_batch(append_descriptors(layout, table, pos=17)).clean
+
+    def test_cli_demo_corpus_fuzz(self, capsys):
+        from repro.sanitize.__main__ import main
+        assert main(["--demo"]) == 0
+        assert main(["--corpus"]) == 0
+        assert main(["--fuzz-racy", "6"]) == 0
+        out = capsys.readouterr().out
+        assert "H003" in out            # the demo prints its finding
+        assert "0 hazardous" in out
+        assert "6/6 flagged" in out
+
+    def test_cli_no_args_prints_help(self, capsys):
+        from repro.sanitize.__main__ import main
+        assert main([]) == 0
+        assert "--corpus" in capsys.readouterr().out

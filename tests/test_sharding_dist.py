@@ -1,10 +1,8 @@
 """Distribution tests (subprocess, 8 fake devices): sharded == unsharded,
 pipeline parallelism, compressed psum, collective plans."""
 
-import numpy as np
 import pytest
 
-from repro.core import Transfer1D
 from repro.dist.collectives import (allreduce_cycles, allreduce_seconds,
                                     alltoall_plan, ring_allreduce_plan)
 from repro.dist.pipeline_parallel import pipeline_bubble

@@ -1,6 +1,5 @@
 """Timing-model tests: the paper's §3/§4 performance claims."""
 
-import pytest
 
 from repro.core import (HBM, PULP_L2, RPC_DRAM, SRAM, EngineConfig,
                         MemSystem, Protocol, Transfer1D,

@@ -136,7 +136,6 @@ class TestTrainerFaults:
 
 class TestMicrobatch:
     def test_grad_accumulation_matches_full_batch(self):
-        from repro.models import init_lm
         from repro.train.train_step import init_train_state, make_train_step
         cfg = reduced(get("internlm2-20b"), n_layers=2, d_model=64,
                       n_heads=2, n_kv_heads=1, d_ff=128, vocab=128)

@@ -7,7 +7,6 @@ differential catches it as a byte divergence, and assert the shrinker
 reduces the failing program to a minimal reproducer of the same kind.
 """
 
-import numpy as np
 import pytest
 
 import repro.core.backend as backend
