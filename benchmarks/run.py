@@ -45,6 +45,7 @@ SUITES = [
     ("sanitize", "static hazard sweep throughput vs execute_batch"),
     ("channel_sweep", "multi-channel aggregate bandwidth (§4 concurrency)"),
     ("plan_replay", "compile-once / replay-many paged-KV decode"),
+    ("vm_translate", "virtual-memory translation overhead (TLB-warm)"),
     ("collective_sweep", "multi-engine collective fabric scaling"),
     ("kernel_bench", "kernels + TPU rooflines"),
     ("roofline", "dry-run roofline table"),

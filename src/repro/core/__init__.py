@@ -22,7 +22,7 @@ from .frontend import (FRONTENDS, CompletionEvent, DescFrontend,
                        InstFrontend, IrqController, IrqStats, RegFrontend,
                        make_frontend, write_chain)
 from .backend import (ExecHints, FaultInjector, FaultSite, MemoryMap,
-                      TransferError, build_exec_hints, execute,
+                      PageFault, TransferError, build_exec_hints, execute,
                       execute_batch, init_stream, splitmix32, splitmix64)
 from .plan import (PlanCache, PlanCacheStats, TransferPlan, capture_nd_plan,
                    capture_plan, nd_plan_signature, plan_signature,
@@ -43,6 +43,9 @@ from .spec import (PRESETS, VMEM_ENDPOINT, BackendSpec, ChannelSpec,
                    RtReplicateStage, build_engine, build_engines,
                    build_frontend, cheshire, edge_ai, manticore, preset,
                    pulp_cluster, spec_of)
+from .vm import (MIN_PAGE_SIZE, PageTable, Tlb, TlbStats, TranslateStage,
+                 expert_gather_batch, read_sg_list, sg_gather_batch,
+                 write_sg_list)
 from . import analytics, instream
 
 __all__ = [
@@ -58,7 +61,7 @@ __all__ = [
     "CompletionEvent", "DescFrontend", "FRONTENDS", "InstFrontend",
     "IrqController", "IrqStats", "RegFrontend", "make_frontend",
     "write_chain",
-    "ExecHints", "FaultInjector", "FaultSite", "MemoryMap",
+    "ExecHints", "FaultInjector", "FaultSite", "MemoryMap", "PageFault",
     "TransferError", "build_exec_hints", "execute", "execute_batch",
     "init_stream", "splitmix32", "splitmix64",
     "PlanCache", "PlanCacheStats", "TransferPlan", "capture_nd_plan",
@@ -78,5 +81,8 @@ __all__ = [
     "build_engine", "build_engines",
     "build_frontend", "cheshire", "edge_ai", "manticore", "preset",
     "pulp_cluster", "spec_of",
+    "MIN_PAGE_SIZE", "PageTable", "Tlb", "TlbStats", "TranslateStage",
+    "expert_gather_batch", "read_sg_list", "sg_gather_batch",
+    "write_sg_list",
     "analytics", "instream",
 ]

@@ -134,10 +134,51 @@ class TransferError(Exception):
     reason: str
     index: int = -1
 
+    @property
+    def kind(self) -> str:
+        """Coarse error class: ``"injected"`` (seeded fault site),
+        ``"page-fault"`` (translation miss) or ``"bounds"`` (a real
+        out-of-range access)."""
+        if "injected" in self.reason:
+            return "injected"
+        if "page fault" in self.reason:
+            return "page-fault"
+        return "bounds"
+
     def __str__(self) -> str:
-        return (f"transfer error at burst {self.index} "
+        return (f"transfer error [{self.kind}] at burst {self.index} "
                 f"src={self.burst.src_addr:#x} "
                 f"dst={self.burst.dst_addr:#x} len={self.burst.length}: "
+                f"{self.reason}")
+
+
+@dataclass
+class PageFault(TransferError):
+    """A burst whose virtual page has no current translation.
+
+    Raised by `repro.core.vm.TranslateStage` during lowering (not during
+    byte movement): ``index`` is the row of the faulting burst in the
+    batch handed to the stage, ``vaddr`` the exact faulting virtual
+    address, ``space`` the address space and ``vpn`` the virtual page
+    number.  ``table`` references the live `PageTable` so the engine's
+    ``pin`` verb can map the page on demand (`PageFault.pin`).
+    """
+
+    vaddr: int = -1
+    space: object = None
+    vpn: int = -1
+    table: object = None
+
+    def pin(self) -> int:
+        """Map the faulting page on demand via the owning page table's
+        pin allocator; returns the assigned physical page number."""
+        if self.table is None:
+            raise RuntimeError("page fault carries no page table to pin on")
+        return self.table.pin(self.space, self.vpn)
+
+    def __str__(self) -> str:
+        return (f"transfer error [page-fault] at burst {self.index} "
+                f"va={self.vaddr:#x} space={self.space} vpn={self.vpn}: "
                 f"{self.reason}")
 
 

@@ -34,8 +34,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from . import simulator as sim
-from .backend import (ExecHints, FaultInjector, MemoryMap, TransferError,
-                      execute_batch)
+from .backend import (ExecHints, FaultInjector, MemoryMap, PageFault,
+                      TransferError, execute_batch)
 from .descriptor import (DescriptorBatch, NdTransfer, Transfer1D,
                          concat_batches)
 from .frontend import CompletionEvent, IrqController
@@ -62,38 +62,62 @@ class LoweredPort:
 
 @dataclass
 class ErrorPolicy:
-    """Paper §2.3 error handler: on a failing burst the engine pauses,
-    reports the legalized burst base address, and the PEs choose one of
-    continue / abort / replay.
+    """Paper §2.3 error handler, extended with the virtual-memory verbs:
+    on a failing burst (or a page fault during lowering) the engine
+    pauses, reports the offender, and the policy chooses one of
+    continue / abort / replay / pin / retry.
+
+    The two virtual-memory verbs act on *page faults* raised by a
+    translating mid-end stage (`repro.core.vm.TranslateStage`):
+    ``"pin"`` maps the faulting page on demand through the page table's
+    pin allocator and re-lowers; ``"retry"`` invokes the engine's
+    ``page_fault_handler`` (the OS model) and re-lowers, up to
+    ``max_replays`` attempts per page.  On ordinary execution faults
+    both degrade to the replay verb.
 
     ``replay_backoff`` models the retry penalty of a real error handler
-    (re-arbitrating the port, re-fetching the burst): every replay adds
-    this many cycles to the drain's timing, surfaced on
-    `ChannelSimResult.backoff_cycles` (and folded into
-    ``total_cycles``) — the functional byte movement is unaffected.
+    (re-arbitrating the port, re-fetching the burst, a fault-handler
+    round trip).  The penalty is *exponential* in the per-burst (or
+    per-page) attempt number — ``replay_backoff << attempt`` cycles,
+    deterministically capped at ``backoff_cap`` — accumulated on the
+    drain's timing and surfaced on `ChannelSimResult.backoff_cycles`
+    (and folded into ``total_cycles``); the functional byte movement is
+    unaffected.
 
     Every field is validated eagerly at construction — a typo must fail
     the instantiation, not surface as undefined behaviour deep inside
     the drain loop of the first failing transfer."""
 
-    #: the paper's three error-handler verbs (§2.3)
-    VERBS = ("continue", "abort", "replay")
+    #: the paper's three error-handler verbs (§2.3) + the VM fault verbs
+    VERBS = ("continue", "abort", "replay", "pin", "retry")
 
-    action: str = "replay"        # "continue" | "abort" | "replay"
+    action: str = "replay"
     max_replays: int = 3
-    replay_backoff: int = 0       # cycles added per replayed burst
+    replay_backoff: int = 0       # base cycles per replayed burst
+    backoff_cap: int = 1 << 16    # deterministic exponential-backoff cap
 
     def __post_init__(self) -> None:
         if self.action not in self.VERBS:
             raise ValueError(
-                f"unknown error-policy action {self.action!r}: the paper's "
-                f"§2.3 verbs are {', '.join(map(repr, self.VERBS))}")
+                f"unknown error-policy action {self.action!r}: the "
+                f"handler verbs are {', '.join(map(repr, self.VERBS))}")
         if self.max_replays < 0:
             raise ValueError(
                 f"max_replays must be >= 0, got {self.max_replays}")
         if self.replay_backoff < 0:
             raise ValueError(
                 f"replay_backoff must be >= 0, got {self.replay_backoff}")
+        if self.backoff_cap < 1:
+            raise ValueError(
+                f"backoff_cap must be >= 1, got {self.backoff_cap}")
+
+    def backoff_for(self, attempt: int) -> int:
+        """Penalty cycles of the ``attempt``-th retry (0-based) of one
+        burst/page: ``replay_backoff * 2**attempt``, capped."""
+        if self.replay_backoff <= 0:
+            return 0
+        return min(self.replay_backoff << min(attempt, 62),
+                   self.backoff_cap)
 
 
 @dataclass
@@ -104,8 +128,15 @@ class EngineStats:
     bursts: int = 0
     errors: int = 0
     replays: int = 0
+    #: per-verb error-handler invocation counts (fault-storm visibility)
+    continues: int = 0
+    aborts: int = 0
+    pins: int = 0
+    retries: int = 0
+    #: page faults seen (raised by translation, or dropped by continue)
+    page_faults: int = 0
     #: error-handler retry/stall penalty cycles accumulated across drains
-    #: (`ErrorPolicy.replay_backoff` per replay, plus injected stalls)
+    #: (`ErrorPolicy.backoff_for` per attempt, plus injected stalls)
     backoff_cycles: int = 0
     #: submissions that could not be served by a configured plan cache
     #: (multi-back-end split, or an unsigned custom pipeline stage) —
@@ -127,6 +158,10 @@ class CompletionRecord:
     status: str = "pending"      # "pending" | "done" | "error"
     bytes_moved: int = 0
     pending: int = 1             # queue items not yet drained
+    #: pages the continue verb dropped while lowering this submission's
+    #: shards, as (space name, vpn) in first-occurrence order — the
+    #: faulted-page bitmap of a partially completed transfer
+    faulted_pages: Tuple = ()
 
     def covers(self, tid: int) -> bool:
         return self.tid <= tid < self.tid + self.count
@@ -266,6 +301,19 @@ class IDMAEngine:
         self.fault_injector: Optional[FaultInjector] = None
         self._burst_cursor = 0       # drain-global burst ordinal
         self._drain_backoff = 0      # replay/stall penalty of this drain
+        #: whether any pipeline stage rewrites address values (VA→PA):
+        #: routes page faults and post-rebind value application
+        self._has_translate = any(getattr(st, "translates", False)
+                                  for st in self.pipeline)
+        #: the OS model of the ``retry`` verb: ``handler(fault, attempt)``
+        #: is invoked on every page fault the retry/replay policy absorbs
+        #: (typically it maps the page); None leaves recovery to `pin`
+        #: or to exhaustion
+        self.page_fault_handler: Optional[
+            Callable[[PageFault, int], None]] = None
+        #: pages dropped by the continue verb during the most recent
+        #: `_lower_ports` call, as (space name, vpn)
+        self._last_lower_faults: List[Tuple[str, int]] = []
 
     @property
     def spec(self) -> "EngineSpec":
@@ -462,11 +510,24 @@ class IDMAEngine:
         streams = []
         stream_beats = []
         beats_ok = self.sim_config.bus_width == self.bus_width
+        # reset the drain's penalty accumulator *before* lowering: the
+        # pin/retry fault loop charges its backoff here
+        self._drain_backoff = 0
+        #: per-item lowering outcome: a terminal fault to re-raise at the
+        #: item's drain position, and the pages continue-mode dropped
+        fault_at: Dict[int, TransferError] = {}
+        lower_faults: Dict[int, Tuple] = {}
         for c, q in enumerate(self._queues):
             parts: List[LoweredPort] = []
             off = 0
             for tid0, _, payload in q:
-                lps = self._lower_ports(payload)
+                try:
+                    lps = self._lower_ports(payload)
+                except TransferError as err:
+                    fault_at[tid0] = err
+                    lps = []
+                if self._last_lower_faults:
+                    lower_faults[tid0] = tuple(self._last_lower_faults)
                 lowered[tid0] = lps
                 count = sum(len(lp.batch) for lp in lps)
                 if count:       # burst span in channel c's stream
@@ -496,11 +557,15 @@ class IDMAEngine:
                 cyc = max(cyc, max(wend[lo:lo + cnt]))
             return cyc
 
+        # continue-mode page drops are page faults too — count them once
+        # per payload (the partial-apply dedup scope)
+        self.stats.page_faults += sum(
+            len(pages) for pages in lower_faults.values())
+
         # -- functional fabric: drain in submission (tid) order -----------
         for q in self._queues:
             q.clear()
         self._burst_cursor = 0
-        self._drain_backoff = 0
         events: List[CompletionEvent] = []
         rec_cycle: Dict[int, int] = {}
         try:
@@ -508,6 +573,9 @@ class IDMAEngine:
                 rec = self._record_for(tid0)
                 before = self.stats.bytes_moved
                 try:
+                    lowering_fault = fault_at.get(tid0)
+                    if lowering_fault is not None:
+                        raise lowering_fault
                     self._run_ports(lowered[tid0])
                     if isinstance(payload, DescriptorBatch):
                         count = len(payload)
@@ -521,6 +589,9 @@ class IDMAEngine:
                         rec.status = "error"     # terminal
                         rec.pending -= 1
                         rec.bytes_moved += self.stats.bytes_moved - before
+                        pages = lower_faults.get(tid0)
+                        if pages:
+                            rec.faulted_pages = rec.faulted_pages + pages
                         cyc = max(rec_cycle.get(rec.tid, 0),
                                   span_cycle(tid0))
                         if first:   # one interrupt per record: a later
@@ -536,6 +607,9 @@ class IDMAEngine:
                 if rec is not None:
                     rec.pending -= 1
                     rec.bytes_moved += self.stats.bytes_moved - before
+                    pages = lower_faults.get(tid0)
+                    if pages:
+                        rec.faulted_pages = rec.faulted_pages + pages
                     cyc = max(rec_cycle.get(rec.tid, 0), span_cycle(tid0))
                     rec_cycle[rec.tid] = cyc
                     if rec.pending <= 0 and rec.status != "error":
@@ -632,7 +706,95 @@ class IDMAEngine:
 
     def _lower_ports(self, transfer: Union[Descriptor, DescriptorBatch]
                      ) -> List[LoweredPort]:
-        """The lowering pipeline, plan-cache first.
+        """The lowering pipeline, wrapped in the page-fault handler loop.
+
+        Engines without a translating stage lower exactly once.  With
+        one, a `PageFault` raised during lowering runs the policy verb —
+        ``pin`` maps the page on demand, ``retry``/``replay`` invoke the
+        ``page_fault_handler`` — and re-lowers, bounded per faulting page
+        by ``max_replays`` (fault storms terminate: every page either
+        gets mapped or exhausts its attempts and aborts).  The
+        ``continue`` verb never raises here — the stage's partial apply
+        drops unmapped rows, reported via ``_last_lower_faults``.
+        """
+        self._last_lower_faults = []
+        if not self._has_translate:
+            return self._lower_ports_once(transfer)
+        attempts: Dict[Tuple[str, int], int] = {}
+        while True:
+            try:
+                return self._lower_ports_once(transfer)
+            except PageFault as err:
+                self._handle_page_fault(err, attempts)
+
+    def _handle_page_fault(self, err: PageFault,
+                           attempts: Dict[Tuple[str, int], int]) -> None:
+        """Run the error-policy verb for one lowering-time page fault;
+        returns to re-lower, or raises on abort/exhaustion."""
+        policy = self.error_policy
+        self.stats.errors += 1
+        self.stats.page_faults += 1
+        action = policy.action
+        if action in ("abort", "continue"):
+            # continue-mode lowering drops faulted rows via the partial
+            # hooks; a PageFault escaping means the stage has no partial
+            # path — terminal either way
+            self.stats.aborts += 1
+            raise err
+        key = (str(err.space), err.vpn)
+        n = attempts.get(key, 0) + 1
+        attempts[key] = n
+        # pin gets max_replays + 1 attempts (one pin is always allowed —
+        # a *second* fault on a pinned page means the pin failed);
+        # retry/replay get max_replays handler round trips
+        bound = policy.max_replays + 1 if action == "pin" \
+            else policy.max_replays
+        if n > bound:
+            self.stats.aborts += 1
+            raise err
+        self._drain_backoff += policy.backoff_for(n - 1)
+        if action == "pin":
+            self.stats.pins += 1
+            err.pin()
+        elif action == "retry":
+            self.stats.retries += 1
+            if self.page_fault_handler is not None:
+                self.page_fault_handler(err, n)
+        else:                                   # replay
+            self.stats.replays += 1
+            if self.page_fault_handler is not None:
+                self.page_fault_handler(err, n)
+
+    def _apply_value_stages(self, legal: DescriptorBatch,
+                            plan) -> LoweredPort:
+        """Apply the pipeline's value stages (VA→PA) to a plan-replayed
+        batch: captured plans live on the virtual plane (`capture_plan`
+        runs ``apply_structure`` only), so every replay re-translates
+        against the *current* page table.  Beat counts survive
+        translation (pa ≡ va mod page size, and the bus width divides
+        the page size); continue-mode drops subset them and invalidate
+        the grouping hints."""
+        beats, hints = plan.beats, plan.hints
+        for stage in self.pipeline:
+            if not getattr(stage, "translates", False):
+                continue
+            if self.error_policy.action == "continue" and \
+                    hasattr(stage, "rebind_values_partial"):
+                legal, keep, faults = stage.rebind_values_partial(legal)
+                if faults:
+                    self._last_lower_faults.extend(faults)
+                    if beats is not None:
+                        beats = beats[keep]
+                    hints = None
+            else:
+                legal = stage.rebind_values(legal)
+        return LoweredPort(legal, prechecked=True, beats=beats,
+                           hints=hints)
+
+    def _lower_ports_once(self, transfer: Union[Descriptor,
+                                                DescriptorBatch]
+                          ) -> List[LoweredPort]:
+        """One lowering pass, plan-cache first.
 
         With a `plan_cache` configured (and a plannable engine: single
         back-end, every pipeline stage structurally signed), a submission
@@ -669,6 +831,8 @@ class IDMAEngine:
                     legal, plan = pc.replay_batch(transfer,
                                                   bus_width=self.bus_width,
                                                   pipeline=self.pipeline)
+                if self._has_translate:
+                    return [self._apply_value_stages(legal, plan)]
                 return [LoweredPort(legal, prechecked=True,
                                     beats=plan.beats, hints=plan.hints)]
             pc.stats.bypasses += 1
@@ -692,7 +856,13 @@ class IDMAEngine:
         else:
             batch = DescriptorBatch.from_transfers([transfer])
         for stage in self.pipeline:
-            batch = stage.apply(batch)
+            if self.error_policy.action == "continue" and \
+                    hasattr(stage, "apply_partial"):
+                batch, faults = stage.apply_partial(batch)
+                if faults:
+                    self._last_lower_faults.extend(faults)
+            else:
+                batch = stage.apply(batch)
         if self.midends:
             ones = batch.to_transfers()
             for me in self.midends:
@@ -783,18 +953,22 @@ class IDMAEngine:
                         port.length[done:idx].sum())
                     action = self.error_policy.action
                     if action == "abort":
+                        self.stats.aborts += 1
                         raise
                     if action == "continue":
+                        self.stats.continues += 1
                         self._fail_at = None
                         done = idx + 1          # skip the offending burst
-                    else:                       # replay
+                    else:     # replay family: replay / pin / retry — the
+                        # VM verbs act like replay on execution faults
                         replays += 1
                         self.stats.replays += 1
                         if replays > self.error_policy.max_replays:
+                            self.stats.aborts += 1
                             raise
                         self._fail_at = None    # fault cleared on replay
                         self._drain_backoff += \
-                            self.error_policy.replay_backoff
+                            self.error_policy.backoff_for(replays - 1)
                         done = idx              # re-issue the same burst
                 if done <= before_done:
                     no_progress += 1

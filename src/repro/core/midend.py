@@ -200,6 +200,55 @@ def mp_split_batch(batch: DescriptorBatch, boundary: int,
     return batch.rewrite(nz[row], start, seg)
 
 
+def page_split_batch(batch: DescriptorBatch,
+                     page_sizes: dict) -> DescriptorBatch:
+    """Vectorized page-boundary split for the virtual-memory mid-end: no
+    emitted row crosses a page boundary on *either* port, with the page
+    size looked up per address space (`page_sizes` maps `Protocol` →
+    power-of-two page bytes).  Generator sources have no address space and
+    never constrain the split.  Output is grouped by input row in input
+    order (zero-length rows drop), exactly like `mp_split_batch`.
+    """
+    from .descriptor import CODE_PROTO, GENERATOR_PROTOCOLS
+    from .legalizer import _boundary_segments
+    for proto, size in page_sizes.items():
+        if size <= 0 or (size & (size - 1)):
+            raise ValueError(f"page size for {proto} must be a positive "
+                             f"power of two, got {size}")
+    nz = np.nonzero(batch.length > 0)[0]
+    empty = np.empty(0, dtype=np.int64)
+    if nz.shape[0] == 0:
+        return batch.rewrite(empty, empty, empty)
+    gen_codes = {PROTO_CODE[p] for p in GENERATOR_PROTOCOLS}
+    sp = batch.src_proto[nz]
+    dp = batch.dst_proto[nz]
+
+    def period_of(code: int) -> int:
+        if code in gen_codes:
+            return 0
+        return page_sizes.get(CODE_PROTO[code], 0)
+
+    pair = (sp.astype(np.int64) << 8) | dp
+    rows_parts: List[np.ndarray] = []
+    starts_parts: List[np.ndarray] = []
+    segs_parts: List[np.ndarray] = []
+    for code in np.unique(pair).tolist():
+        sub = np.flatnonzero(pair == code)
+        p_src = period_of(code >> 8)
+        p_dst = period_of(code & 0xFF)
+        row, start, seg = _boundary_segments(
+            batch.src_addr[nz[sub]], batch.dst_addr[nz[sub]],
+            batch.length[nz[sub]], p_src, p_dst)
+        rows_parts.append(sub[row])
+        starts_parts.append(start)
+        segs_parts.append(seg)
+    rows = np.concatenate(rows_parts)
+    starts = np.concatenate(starts_parts)
+    segs = np.concatenate(segs_parts)
+    order = np.lexsort((starts, rows))     # restore input-row order
+    return batch.rewrite(nz[rows[order]], starts[order], segs[order])
+
+
 # --------------------------------------------------------------------------
 # mp_dist — distribute over downstream ports
 # --------------------------------------------------------------------------

@@ -387,12 +387,19 @@ def capture_plan(batch: DescriptorBatch, bus_width: int = 8,
     mid-end stages and the legalizer gathers that column untouched, so
     the emitted stream's ``transfer_id`` IS the relocation table's
     ``desc_row`` (offsets stay relative to the *input* batch addresses).
+
+    Value stages (`MidendStage.apply_structure` vs ``rebind_values``,
+    e.g. the VM translation stage) contribute only their *structure*
+    here: the captured plan stays on the input (virtual) address plane,
+    keeping ``rebind`` linear, and the engine applies their value
+    rewrite after every rebind.  Consequently `replay_execute` /
+    `simulate_plan` are only valid for pipelines without value stages.
     """
     n = len(batch)
     shadow = dataclasses.replace(
         batch, transfer_id=np.arange(n, dtype=np.int64))
     for stage in pipeline:
-        shadow = stage.apply(shadow)
+        shadow = getattr(stage, "apply_structure", stage.apply)(shadow)
     legal = legalize_batch(shadow, bus_width=bus_width)
     check_legal_batch(legal, bus_width=bus_width)   # once, at capture
     rows = legal.transfer_id
@@ -424,7 +431,7 @@ def capture_nd_plan(nd: NdTransfer, bus_width: int = 8,
     table, which is why they are part of `nd_plan_signature`."""
     tb = tensor_nd_batch(nd)
     for stage in pipeline:
-        tb = stage.apply(tb)
+        tb = getattr(stage, "apply_structure", stage.apply)(tb)
     legal = legalize_batch(tb, bus_width=bus_width)
     check_legal_batch(legal, bus_width=bus_width)
     nb = len(legal)

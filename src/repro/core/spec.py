@@ -92,12 +92,41 @@ class MidendStage:
     gathers/shifts only (as `DescriptorBatch.select`/``rewrite`` do): the
     plan's relocation table maps every emitted burst back to an input
     descriptor through the ``transfer_id`` column.
+
+    **Value stages.**  Most stages are pure *structure*: their output
+    addresses are the input addresses plus per-row offsets, which is the
+    linear relation plan replay's ``rebind`` assumes.  A stage that
+    rewrites address *values* non-linearly (the canonical example is
+    `repro.core.vm.TranslateStage`, whose VA→PA mapping is piecewise per
+    page) splits its work across two hooks so it stays plan-cacheable:
+
+    * ``apply_structure(batch)`` — only the structural part (row splits/
+      routing), leaving addresses on the input (virtual) plane.  Plan
+      capture runs this, so captured plans live on the virtual plane and
+      ``rebind`` stays linear;
+    * ``rebind_values(batch)`` — rewrite the address values of an
+      already-structured batch (every row legal w.r.t. the stage's
+      structure).  The engine applies this after plan rebind — and after
+      the uncached ``apply`` path implicitly via
+      ``apply == rebind_values ∘ apply_structure``.
+
+    The default ``apply_structure`` simply runs ``apply`` (pure-structure
+    stages).  Stages with a distinct ``rebind_values`` should set a
+    truthy ``translates`` class attribute so the engine routes faults and
+    value-rebinds for them.
     """
 
     name: str = "midend"
+    #: stages that rewrite address values (see class docstring) set this
+    translates: bool = False
 
     def apply(self, batch: DescriptorBatch) -> DescriptorBatch:
         raise NotImplementedError
+
+    def apply_structure(self, batch: DescriptorBatch) -> DescriptorBatch:
+        """The structural part of ``apply`` (plan capture runs this);
+        identical to ``apply`` for pure-structure stages."""
+        return self.apply(batch)
 
     def __call__(self, batch: DescriptorBatch) -> DescriptorBatch:
         return self.apply(batch)
@@ -342,7 +371,8 @@ class BackendSpec:
         return ("backend", self.num_ports, self.boundary, self.bus_width,
                 tuple(self.protocols), self.error_policy.action,
                 self.error_policy.max_replays,
-                self.error_policy.replay_backoff)
+                self.error_policy.replay_backoff,
+                self.error_policy.backoff_cap)
 
 
 @dataclass(frozen=True)

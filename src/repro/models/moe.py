@@ -155,6 +155,24 @@ def moe_dispatch_compute(p: Params, x2: jax.Array, mc: MoEConfig,
     return y, aux, dropped
 
 
+def moe_expert_gather(token_va: np.ndarray, expert_idx: np.ndarray,
+                      mc: MoEConfig, d_bytes: int, expert_buf_va: int,
+                      capacity: Optional[int] = None):
+    """Descriptor-plane twin of `moe_dispatch_compute`'s dispatch: the
+    routed gather as one virtual-address `DescriptorBatch` for the DMA
+    engine (`core.vm.expert_gather_batch`), using the same sort-based
+    capacity/rank math this module computes on-device.  ``token_va`` are
+    per-token source VAs; overflowed (token, expert) pairs are dropped
+    exactly like the compute path's trash row."""
+    from repro.core.vm import expert_gather_batch
+
+    tokens = int(np.asarray(token_va).shape[0])
+    cap = capacity if capacity is not None else _capacity(tokens, mc)
+    return expert_gather_batch(
+        token_va, expert_idx, n_experts=mc.n_experts, capacity=cap,
+        d_bytes=d_bytes, expert_buf_va=expert_buf_va)
+
+
 def _shard_map_dispatch(p: Params, x2: jax.Array, mc: MoEConfig, act: str,
                         compute, mesh, rcfg=None
                         ) -> Tuple[jax.Array, jax.Array]:

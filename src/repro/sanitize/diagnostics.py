@@ -21,6 +21,9 @@ H005   intra-descriptor overlap: one row's source and destination
        windows overlap in the same address space
 H006   cross-engine race: overlapping bytes touched from two engines
        sharing one memory map in the same fabric phase
+H007   virtual-address aliasing: translation maps two virtual pages onto
+       one physical page, so a program disjoint on the virtual plane
+       races on the physical plane
 S001   plan cache configured on an unplannable composition — every
        submission bypasses it
 S002   plan cache configured with a multi-port back-end split — every
@@ -32,6 +35,8 @@ S005   replay error policy with max_replays=0 — the replay verb can
 P001   plan replay structural mismatch: the rebound frozen stream is not
        the stream a from-scratch lowering emits for the new addresses
 P002   rebound plan stream fails the legalizer's legality gate
+P003   stale TLB translation: a cached translation entry disagrees with
+       the current page table (missed shootdown)
 ====== ====================================================================
 """
 
@@ -51,6 +56,7 @@ CODES: Dict[str, str] = {
     "H004": "write-after-read between unordered rows",
     "H005": "intra-descriptor src/dst overlap",
     "H006": "cross-engine race within one fabric phase",
+    "H007": "virtual-address aliasing onto one physical page",
     "S001": "plan cache on unplannable composition (always bypassed)",
     "S002": "plan cache with multi-port back-end split (always bypassed)",
     "S003": "declared protocol port without a backing address space",
@@ -58,6 +64,7 @@ CODES: Dict[str, str] = {
     "S005": "replay policy with max_replays=0 (behaves as abort)",
     "P001": "plan replay structural mismatch",
     "P002": "rebound plan stream fails legality",
+    "P003": "stale TLB translation vs current page table",
 }
 
 

@@ -20,7 +20,12 @@ The ordering model mirrors the engine's documented contract exactly:
 * batches on **different engines** sharing one memory map (a
   `CollectiveFabric` phase) → ``H006``;
 * one row whose source and destination windows overlap in the same
-  space → ``H005``.
+  space → ``H005``;
+* a hazard present on the **physical plane** (after the pipeline's
+  translation stages) but absent on the **virtual plane** (translation
+  cut structure applied, addresses left virtual) is created by the
+  translation itself — two virtual pages aliasing one physical page
+  → ``H007``.
 
 The sweep screens each address space in two tiers.  First a
 disjointness screen: sorting starts and ends *independently* (two plain
@@ -83,10 +88,18 @@ class Unit:
     label: str = ""
 
 
-def as_batch(payload, pipeline: Sequence = ()) -> DescriptorBatch:
+def as_batch(payload, pipeline: Sequence = (),
+             plane: str = "physical") -> DescriptorBatch:
     """Normalize any submission payload to a `DescriptorBatch` and run
     the spec mid-end pipeline over it (the footprint the engine will
-    actually execute)."""
+    actually execute).
+
+    Value stages (``stage.translates``) are handled per ``plane``:
+    ``"physical"`` rebinds addresses through the stage, dropping rows
+    whose pages are unmapped via ``apply_partial`` (the sanitizer runs
+    pre-drain and must never raise a `PageFault` itself); ``"virtual"``
+    applies only the stage's cut structure, leaving virtual addresses in
+    place — the footprint used for the H007 alias re-sweep."""
     if isinstance(payload, DescriptorBatch):
         batch = payload
     elif isinstance(payload, NdTransfer):
@@ -97,7 +110,15 @@ def as_batch(payload, pipeline: Sequence = ()) -> DescriptorBatch:
         raise TypeError(f"cannot sanitize payload of type "
                         f"{type(payload).__name__}")
     for stage in pipeline:
-        batch = stage.apply(batch)
+        if getattr(stage, "translates", False):
+            if plane == "virtual":
+                batch = stage.apply_structure(batch)
+            elif hasattr(stage, "apply_partial"):
+                batch, _ = stage.apply_partial(batch)
+            else:
+                batch = stage.apply(batch)
+        else:
+            batch = stage.apply(batch)
     return batch
 
 
@@ -547,19 +568,90 @@ def check_batch(batch: DescriptorBatch, suppress: Sequence[str] = (),
                        budget=budget)
 
 
+#: physical-plane pair hazards that VA aliasing can manufacture — the
+#: codes the H007 two-plane re-sweep compares across planes
+_ALIASABLE = ("H001", "H002", "H003", "H004", "H006")
+
+
+def _alias_audit(report: Report, virtual_units: Sequence[Unit],
+                 pipeline: Sequence, suppress: Tuple[str, ...],
+                 limit: int, budget: int) -> None:
+    """H007: two-plane alias audit.  If the physical-plane sweep found a
+    pair hazard but repeating it on the virtual plane (translation cut
+    structure applied, addresses left virtual) comes back clean, the
+    hazard was created by the translation itself: two virtual pages
+    alias one physical page.  Names the aliased physical pages from each
+    translator's page table."""
+    hit = [c for c in _ALIASABLE if report.has(c)]
+    if not hit:
+        return
+    translators = [st for st in pipeline
+                   if getattr(st, "translates", False)]
+    if not translators:
+        return
+    virt = check_units(virtual_units, suppress=suppress, limit=limit,
+                       budget=budget)
+    if any(virt.has(c) for c in _ALIASABLE):
+        return      # hazardous on the virtual plane too: not aliasing
+    if "H007" in suppress:
+        report.suppressed["H007"] = report.suppressed.get("H007", 0) + 1
+        return
+    emitted = 0
+    for st in translators:
+        table = getattr(st, "table", None)
+        aliases = table.aliases() if table is not None else {}
+        for proto in sorted(aliases, key=lambda p: p.value):
+            for ppn, vpns in sorted(aliases[proto].items()):
+                if emitted >= limit:
+                    report.notes.append(
+                        f"H007: more than {limit} aliased pages, "
+                        f"further ones dropped")
+                    return
+                emitted += 1
+                report.diagnostics.append(Diagnostic(
+                    code="H007",
+                    message=(f"physical page {ppn:#x} in {proto.name} "
+                             f"aliased by virtual pages "
+                             f"{', '.join(f'{v:#x}' for v in vpns)} — "
+                             f"program is disjoint on the virtual plane "
+                             f"but races after translation"),
+                    space=proto.value))
+    if not emitted:
+        # the hazard only exists post-translation yet no page shows a
+        # duplicate mapping in the current walk (e.g. the table mutated
+        # since lowering) — still name the plane discrepancy
+        report.diagnostics.append(Diagnostic(
+            code="H007",
+            message=("hazard present on the physical plane only: "
+                     "translation aliases distinct virtual windows onto "
+                     "overlapping physical bytes")))
+
+
 def check_engine(engine, suppress: Sequence[str] = (), limit: int = 50,
                  budget: int = 250_000) -> Report:
     """Sweep everything queued on an engine — the drain `wait_all` is
     about to run.  Each queue item becomes one unit on its channel
     (post spec-pipeline footprint), so same-channel FIFO ordering is
-    honored and cross-channel interleavings are flagged."""
+    honored and cross-channel interleavings are flagged.  When the
+    pipeline translates, a physical-plane pair hazard triggers the
+    virtual-plane re-sweep (H007 alias audit)."""
+    sup = normalize_suppress(suppress)
+    translated = any(getattr(st, "translates", False)
+                     for st in engine.pipeline)
     units: List[Unit] = []
+    vunits: List[Unit] = []
     for c, q in enumerate(engine._queues):
         for tid0, _, payload in q:
             units.append(Unit(as_batch(payload, engine.pipeline),
                               channel=c, item=tid0))
-    return check_units(units, suppress=suppress, limit=limit,
-                       budget=budget)
+            if translated:
+                vunits.append(Unit(as_batch(payload, engine.pipeline,
+                                            plane="virtual"),
+                                   channel=c, item=tid0))
+    report = check_units(units, suppress=sup, limit=limit, budget=budget)
+    if translated:
+        _alias_audit(report, vunits, engine.pipeline, sup, limit, budget)
+    return report
 
 
 def check_phase(batches, pipeline: Sequence = (),
@@ -574,8 +666,14 @@ def check_phase(batches, pipeline: Sequence = (),
         pairs = sorted(batches.items())
     else:
         pairs = list(enumerate(batches))
+    sup = normalize_suppress(suppress)
     units = [Unit(as_batch(b, pipeline), engine=int(r), channel=-1,
                   item=int(r))
              for r, b in pairs if b is not None and len(b)]
-    return check_units(units, suppress=suppress, limit=limit,
-                       budget=budget)
+    report = check_units(units, suppress=sup, limit=limit, budget=budget)
+    if any(getattr(st, "translates", False) for st in pipeline):
+        vunits = [Unit(as_batch(b, pipeline, plane="virtual"),
+                       engine=int(r), channel=-1, item=int(r))
+                  for r, b in pairs if b is not None and len(b)]
+        _alias_audit(report, vunits, pipeline, sup, limit, budget)
+    return report

@@ -13,7 +13,16 @@ column against the rebound frozen stream.
   ordering) — replaying this plan executes different bursts than the
   uncached path would;
 * ``P002`` — the rebound stream fails `check_legal_batch`'s legality
-  gate (a frozen cut that is illegal at the new addresses).
+  gate (a frozen cut that is illegal at the new addresses);
+* ``P003`` — a value stage's translation cache (TLB) holds an entry
+  that disagrees with the current page table: a replay through that
+  stage would rebind onto a stale physical address.
+
+Value stages (``stage.translates``) are audited on the **virtual
+plane**: plans are captured through ``apply_structure`` (the engine
+rebinds values after replay), so the from-scratch comparison lowers the
+same way — translation values never enter the P001/P002 comparison,
+only the P003 TLB audit sees them.
 
 The audit costs one full lowering per call — it deliberately un-does the
 cache's saving, which is why it only runs under the opt-in
@@ -52,6 +61,25 @@ def _rebind_quiet(plan: TransferPlan, src, dst, tid) -> DescriptorBatch:
     return out
 
 
+def _audit_tlb(pipeline: Sequence, report: Report) -> None:
+    """P003: ask every value stage that exposes ``audit_translations``
+    to compare its TLB entries against a fresh page-table walk — stale
+    entries mean a replay through this stage rebinds onto physical
+    addresses the table no longer maps there (a missed shootdown)."""
+    for stage in pipeline:
+        audit = getattr(stage, "audit_translations", None)
+        if audit is None:
+            continue
+        for space, vpn, cached, walked in audit():
+            now = ("is unmapped in the current table" if walked is None
+                   else f"now walks to ppn {walked:#x}")
+            report.diagnostics.append(Diagnostic(
+                code="P003",
+                message=(f"stale TLB entry: {space} vpn {vpn:#x} cached "
+                         f"as ppn {cached:#x} but {now} — replays "
+                         f"through this stage use a dead translation")))
+
+
 def _compare(rebound: DescriptorBatch, fresh: DescriptorBatch,
              report: Report) -> None:
     if len(rebound) != len(fresh):
@@ -84,7 +112,7 @@ def audit_plan(plan: TransferPlan, batch: DescriptorBatch,
                             batch.transfer_id)
     fresh = batch
     for stage in pipeline:
-        fresh = stage.apply(fresh)
+        fresh = getattr(stage, "apply_structure", stage.apply)(fresh)
     fresh = legalize_batch(fresh, bus_width=bus_width)
     _compare(rebound, fresh, report)
     try:
@@ -93,6 +121,7 @@ def audit_plan(plan: TransferPlan, batch: DescriptorBatch,
         report.diagnostics.append(Diagnostic(
             code="P002",
             message=f"rebound stream fails legality: {err}"))
+    _audit_tlb(pipeline, report)
     return report
 
 
@@ -107,7 +136,7 @@ def audit_nd_plan(plan: TransferPlan, nd: NdTransfer, bus_width: int = 8,
         np.asarray([nd.transfer_id], dtype=np.int64))
     fresh = tensor_nd_batch(nd)
     for stage in pipeline:
-        fresh = stage.apply(fresh)
+        fresh = getattr(stage, "apply_structure", stage.apply)(fresh)
     fresh = legalize_batch(fresh, bus_width=bus_width)
     _compare(rebound, fresh, report)
     try:
@@ -116,6 +145,7 @@ def audit_nd_plan(plan: TransferPlan, nd: NdTransfer, bus_width: int = 8,
         report.diagnostics.append(Diagnostic(
             code="P002",
             message=f"rebound stream fails legality: {err}"))
+    _audit_tlb(pipeline, report)
     return report
 
 

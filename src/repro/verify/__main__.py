@@ -18,14 +18,16 @@ from .collective import (check_collective_program,
 from .generator import FAMILIES, generate_program, generate_racy_program
 from .harness import check_program
 from .shrink import shrink_program
+from .vm import (check_vm_program, generate_vm_program, shrink_vm_program)
 
 #: the full family rotation: every engine family from the generator plus
-#: the multi-engine collective-fabric family and the deliberately-racy
-#: sanitizer-validation family (seed % len picks one)
-ALL_FAMILIES = FAMILIES + ("collective", "racy")
+#: the multi-engine collective-fabric family, the deliberately-racy
+#: sanitizer-validation family and the virtual-memory translation family
+#: (seed % len picks one — vm lands on seed % 8 == 7)
+ALL_FAMILIES = FAMILIES + ("collective", "racy", "vm")
 
 
-def _run_one(seed, family, differential=False):
+def _run_one(seed, family, differential=False, storm=False):
     """Generate + check one seed; returns (program, divergence, shrinker).
     ``seed % len(ALL_FAMILIES)`` rotates through the scalar-oracle engine
     families AND the multi-engine collective family AND the racy family
@@ -38,6 +40,9 @@ def _run_one(seed, family, differential=False):
     """
     rotation = (FAMILIES + ("racy",)) if differential else ALL_FAMILIES
     fam = family or rotation[seed % len(rotation)]
+    if fam == "vm":
+        program = generate_vm_program(seed, storm=storm)
+        return program, check_vm_program(program), shrink_vm_program
     if fam == "collective":
         program = generate_collective_program(seed)
         return program, check_collective_program(program), \
@@ -64,14 +69,15 @@ def _run_one(seed, family, differential=False):
 
 
 def run_seeds(seeds, family=None, do_shrink=True, fail_fast=False,
-              log=print, differential=False):
+              log=print, differential=False, storm=False):
     """Exercise every seed; returns (stats dict, list of divergences)."""
     totals = {"programs": 0, "submissions": 0, "rows": 0, "faults": 0,
               "collectives": 0}
     divergences = []
     for seed in seeds:
         program, d, shrinker = _run_one(seed, family,
-                                        differential=differential)
+                                        differential=differential,
+                                        storm=storm)
         totals["programs"] += 1
         totals["rows"] += program.num_rows
         if hasattr(program, "submissions"):
@@ -110,6 +116,10 @@ def main(argv=None) -> int:
                         help="stop at the first divergence")
     parser.add_argument("--no-shrink", action="store_true",
                         help="report divergences without shrinking")
+    parser.add_argument("--storm", action="store_true",
+                        help="fault-storm mode: crank the vm family's"
+                             " unmapped-page rate (only affects vm-family"
+                             " programs)")
     parser.add_argument("--differential", action="store_true",
                         help="check the sanitizer contract (clean programs"
                              " are drain-schedule-invariant; racy-family"
@@ -119,7 +129,8 @@ def main(argv=None) -> int:
 
     if args.replay is not None:
         program, d, shrinker = _run_one(args.replay, args.family,
-                                        differential=args.differential)
+                                        differential=args.differential,
+                                        storm=args.storm)
         print(program.describe())
         if d is None:
             print(f"seed {args.replay}: PASS")
@@ -134,7 +145,8 @@ def main(argv=None) -> int:
     seeds = range(args.start, args.start + args.seeds)
     totals, divergences = run_seeds(
         seeds, family=args.family, do_shrink=not args.no_shrink,
-        fail_fast=args.fail_fast, differential=args.differential)
+        fail_fast=args.fail_fast, differential=args.differential,
+        storm=args.storm)
     print(f"{totals['programs']} programs "
           f"({totals['submissions']} submissions, {totals['rows']} rows, "
           f"{totals['faults']} fault sites): "

@@ -82,9 +82,8 @@ class Divergence:
 
 
 def _err_key(e: TransferError) -> Tuple:
-    kind = "injected" if "injected" in e.reason else "bounds"
     b = e.burst
-    return (kind, e.index, b.src_addr, b.dst_addr, b.length)
+    return (e.kind, e.index, b.src_addr, b.dst_addr, b.length)
 
 
 def _enqueue(engine, program: Program) -> None:
@@ -333,7 +332,7 @@ def run_oracle(program: Program) -> EngineRun:
                                 stats["replays"] += 1
                                 if replays > policy.max_replays:
                                     raise
-                                backoff += policy.replay_backoff
+                                backoff += policy.backoff_for(replays - 1)
                                 done = idx
             except TransferError as err:
                 rec.status = "error"

@@ -176,10 +176,11 @@ class TestFaultInjection:
             [FaultSite(index=1, kind="transient", hits=2)])
         eng.dispatch_batch(rows(4))
         res = eng.wait_all()
-        # burst 1 failed twice, replayed twice, then succeeded
+        # burst 1 failed twice, replayed twice, then succeeded;
+        # exponential backoff: 9 + 18 cycles for the two granted replays
         assert eng.stats.replays == 2 and eng.stats.errors == 2
-        assert res.backoff_cycles == 18
-        assert eng.stats.backoff_cycles == 18
+        assert res.backoff_cycles == 27
+        assert eng.stats.backoff_cycles == 27
         assert eng.stats.bytes_moved == 4 * 64
         for i in range(4):
             assert np.array_equal(dst_slice(mem, i),
@@ -195,11 +196,12 @@ class TestFaultInjection:
         tids = eng.dispatch_batch(rows(2))
         with pytest.raises(TransferError, match="injected"):
             eng.wait_all()
-        # 2 replays granted + the exhausting attempt; backoff only for
-        # the granted replays, surfaced even on the abort-out path
+        # 2 replays granted + the exhausting attempt; exponential
+        # backoff (5 + 10) only for the granted replays, surfaced even
+        # on the abort-out path
         assert eng.stats.replays == 3 and eng.stats.errors == 3
-        assert eng.stats.backoff_cycles == 10
-        assert eng.last_channel_result.backoff_cycles == 10
+        assert eng.stats.backoff_cycles == 15
+        assert eng.last_channel_result.backoff_cycles == 15
         assert eng.poll(tids[0]) == "error"
 
     def test_continue_skips_exactly_the_offender(self):

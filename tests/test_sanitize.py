@@ -164,8 +164,8 @@ class TestSweepControls:
         assert severity("H003") == "error"
         assert severity("P001") == "error"
         assert severity("S002") == "warning"
-        assert set(CODES) == {f"H00{i}" for i in range(1, 7)} | \
-            {f"S00{i}" for i in range(1, 6)} | {"P001", "P002"}
+        assert set(CODES) == {f"H00{i}" for i in range(1, 8)} | \
+            {f"S00{i}" for i in range(1, 6)} | {"P001", "P002", "P003"}
 
     def test_warnings_keep_report_clean(self):
         spec = spec2ch()

@@ -310,8 +310,8 @@ class TestValidation:
         """Satellite: a verb typo fails at construction with the verb
         list, never deep inside the drain loop."""
         with pytest.raises(ValueError, match="'continue', 'abort', "
-                                             "'replay'"):
-            ErrorPolicy(action="retry")
+                                             "'replay', 'pin', 'retry'"):
+            ErrorPolicy(action="retyr")
         with pytest.raises(ValueError, match="max_replays"):
             ErrorPolicy(max_replays=-1)
         # and through the spec layer

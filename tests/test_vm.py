@@ -1,0 +1,557 @@
+"""Virtual-memory mid-end: page table, TLB, TranslateStage, fault verbs.
+
+Covers the `core.vm` building blocks in isolation (walks, shootdowns,
+vectorized translate vs a scalar mirror, SG-list and expert-gather
+builders), the engine-integrated page-fault verbs (pin / retry / replay
+/ continue / abort with exponential backoff), plan-cache-hit identity
+with translation in the pipeline, and the sanitizer/planaudit codes the
+PR adds (H007 aliasing, P003 stale TLB).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DescriptorBatch, ErrorPolicy, MemoryMap, PageFault,
+                        Protocol, Transfer1D, TransferError, build_engine,
+                        execute, legalize_batch)
+from repro.core.spec import BackendSpec, ChannelSpec, EngineSpec
+from repro.core.vm import (MIN_PAGE_SIZE, PageTable, Tlb, TranslateStage,
+                           expert_gather_batch, read_sg_list,
+                           sg_gather_batch, write_sg_list)
+
+PAGE = 4096
+AXI = Protocol.AXI4
+
+
+def _table(n_pages=32, pin=None, page=PAGE):
+    t = PageTable({AXI: page},
+                  pin_windows={AXI: pin} if pin else None)
+    return t
+
+
+def _spec(table, policy=None, channels=1, size=64 * PAGE, tlb_capacity=256):
+    return EngineSpec(
+        name="vm_test",
+        midend=(TranslateStage(table, tlb_capacity=tlb_capacity),),
+        backend=BackendSpec(protocols=(AXI,), bus_width=8,
+                            error_policy=policy or ErrorPolicy()),
+        channels=ChannelSpec(count=channels),
+        mem_spaces=((AXI, size),))
+
+
+def _identity(table, n_pages):
+    table.map_range(AXI, 0, 0, n_pages)
+    return table
+
+
+def _batch(rows):
+    return DescriptorBatch.from_arrays(
+        src_addr=np.asarray([r[0] for r in rows], dtype=np.int64),
+        dst_addr=np.asarray([r[1] for r in rows], dtype=np.int64),
+        length=np.asarray([r[2] for r in rows], dtype=np.int64))
+
+
+# --------------------------------------------------------------------------
+# Page table + TLB
+# --------------------------------------------------------------------------
+
+def test_page_table_walk_map_unmap():
+    t = _table()
+    assert t.walk(AXI, 3) is None
+    t.map(AXI, 3, 17)
+    assert t.walk(AXI, 3) == 17
+    # deep vpn exercises multiple radix levels
+    t.map(AXI, 1 << 20, 9)
+    assert t.walk(AXI, 1 << 20) == 9
+    assert t.unmap(AXI, 3) is True
+    assert t.unmap(AXI, 3) is False
+    assert t.walk(AXI, 3) is None
+
+
+def test_page_table_epoch_semantics():
+    t = _table()
+    e0 = t.epoch
+    t.map(AXI, 0, 5)              # fresh map: monotone growth, no bump
+    assert t.epoch == e0
+    t.map(AXI, 0, 5)              # same-ppn re-map: no-op
+    assert t.epoch == e0
+    t.map(AXI, 0, 6)              # remap: bump
+    assert t.epoch == e0 + 1
+    t.unmap(AXI, 0)
+    assert t.epoch == e0 + 2
+    t.invalidate()
+    assert t.epoch == e0 + 3
+
+
+def test_page_sizes_validated():
+    with pytest.raises(ValueError):
+        PageTable({AXI: 1000})            # not a power of two
+    with pytest.raises(ValueError):
+        PageTable({AXI: MIN_PAGE_SIZE // 2})
+
+
+def test_pin_window_allocates_and_is_idempotent():
+    t = _table(pin=(8, 2))
+    p1 = t.pin(AXI, 40)
+    assert p1 == 8 and t.walk(AXI, 40) == 8
+    assert t.pin(AXI, 40) == 8            # idempotent
+    assert t.pin(AXI, 41) == 9
+    with pytest.raises(RuntimeError):     # window exhausted
+        t.pin(AXI, 42)
+    with pytest.raises(RuntimeError):     # no window for this space
+        _table().pin(AXI, 1)
+
+
+def test_tlb_eviction_and_shootdown():
+    t = _table()
+    t.map_range(AXI, 0, 0, 8)
+    tlb = Tlb(capacity=4)
+    t.register_tlb(tlb)
+    code = 0
+    from repro.core.descriptor import PROTO_CODE
+    code = PROTO_CODE[AXI]
+    for vpn in range(6):
+        assert tlb.lookup(code, vpn) is None
+        tlb.insert(code, vpn, t.walk(AXI, vpn))
+    assert tlb.stats.misses == 6
+    assert tlb.stats.evictions == 2       # capacity 4
+    assert tlb.lookup(code, 5) == 5 if t.walk(AXI, 5) == 5 else True
+    t.map(AXI, 2, 7)                      # remap: registered TLB shot down
+    assert tlb.stats.shootdowns == 1
+    assert tlb.lookup(code, 5) is None
+
+
+# --------------------------------------------------------------------------
+# TranslateStage: split + translate vs scalar mirror
+# --------------------------------------------------------------------------
+
+def test_translate_matches_scalar_and_never_straddles():
+    rng = np.random.default_rng(0)
+    t = _table()
+    perm = rng.permutation(32)
+    for v in range(32):
+        t.map(AXI, v, int(perm[v]))
+    stage = TranslateStage(t)
+    rows = [(int(rng.integers(0, 14 * PAGE)), int(rng.integers(16, 28)
+             * PAGE + rng.integers(0, PAGE)), int(rng.integers(1, 3 * PAGE)))
+            for _ in range(50)]
+    out = stage.apply(_batch(rows))
+
+    # no output burst crosses a page boundary on either port
+    for col in (out.src_addr, out.dst_addr):
+        assert np.all((col % PAGE) + out.length <= PAGE)
+
+    # scalar mirror: split at the union of both ports' boundaries, then
+    # walk the table per segment
+    expect = []
+    for src, dst, length in rows:
+        off = 0
+        while off < length:
+            step = min(length - off,
+                       PAGE - ((src + off) % PAGE),
+                       PAGE - ((dst + off) % PAGE))
+            s, d = src + off, dst + off
+            expect.append(((int(perm[s // PAGE]) * PAGE) | (s % PAGE),
+                           (int(perm[d // PAGE]) * PAGE) | (d % PAGE),
+                           step))
+            off += step
+    assert len(out) == len(expect)
+    assert np.array_equal(out.src_addr,
+                          np.asarray([e[0] for e in expect]))
+    assert np.array_equal(out.dst_addr,
+                          np.asarray([e[1] for e in expect]))
+    assert np.array_equal(out.length, np.asarray([e[2] for e in expect]))
+
+
+def test_page_fault_reports_exact_burst_and_va():
+    t = _table()
+    t.map_range(AXI, 0, 0, 2)             # vpn 2 unmapped
+    stage = TranslateStage(t)
+    rows = [(0, PAGE, 64),                # clean
+            (PAGE - 16, PAGE + 100, 64)]  # splits; second seg hits vpn 2?
+    # make a deliberate fault: src crosses into unmapped vpn 2
+    rows = [(0, PAGE, 64), (2 * PAGE - 8, PAGE + 512, 32)]
+    with pytest.raises(PageFault) as ei:
+        stage.apply(_batch(rows))
+    err = ei.value
+    # row 0 -> 1 burst; row 1 splits at src page boundary: burst 1 ok
+    # (8 bytes in vpn 1), burst 2 faults at va 2*PAGE
+    assert err.index == 2
+    assert err.vaddr == 2 * PAGE
+    assert err.vpn == 2 and err.space is AXI
+    assert err.kind == "page-fault"
+    msg = str(err)
+    assert "burst 2" in msg and "page-fault" in msg and \
+        f"{2 * PAGE:#x}" in msg
+
+
+def test_transfer_error_str_has_kind_index_and_addresses():
+    err = TransferError(
+        burst=Transfer1D(src_addr=0x100, dst_addr=0x200, length=32),
+        reason="write beyond space", index=7)
+    msg = str(err)
+    assert "[bounds]" in msg and "burst 7" in msg
+    assert "0x100" in msg and "0x200" in msg and "len=32" in msg
+
+
+# --------------------------------------------------------------------------
+# Engine fault verbs
+# --------------------------------------------------------------------------
+
+def _run_verb(action, handler=None, max_replays=2, backoff=0, cap=1 << 16,
+              pin=None, plan_cache=False):
+    t = _table(pin=pin)
+    t.map_range(AXI, 0, 0, 4)             # vpns 0..3; 4+ unmapped
+    policy = ErrorPolicy(action=action, max_replays=max_replays,
+                         replay_backoff=backoff, backoff_cap=cap)
+    engine = build_engine(_spec(t, policy), plan_cache=plan_cache)
+    if handler is not None:
+        engine.page_fault_handler = handler
+    engine.mem.spaces[AXI][:PAGE] = 7
+    # row 0 clean, row 1 dst page 5 unmapped, row 2 clean
+    batch = _batch([(0, 2 * PAGE, 64), (256, 5 * PAGE + 8, 64),
+                    (512, 3 * PAGE, 64)])
+    engine.dispatch_batch(batch)
+    return engine, t
+
+
+def test_verb_abort_propagates_with_page():
+    engine, _ = _run_verb("abort")
+    with pytest.raises(PageFault) as ei:
+        engine.wait_all()
+    assert ei.value.vpn == 5
+    assert engine.stats.aborts == 1
+    assert engine.stats.page_faults == 1
+    rec = engine._records[0]
+    assert rec.status == "error"
+
+
+def test_verb_pin_maps_on_demand():
+    engine, t = _run_verb("pin", pin=(16, 4))
+    engine.wait_all()
+    assert t.walk(AXI, 5) == 16           # pinned into the window
+    assert engine.stats.pins == 1
+    assert engine.stats.errors == 1
+    assert engine.stats.page_faults == 1
+    assert engine._records[0].status == "done"
+    # the faulted row's bytes landed in the pinned frame
+    assert np.all(engine.mem.spaces[AXI][16 * PAGE + 8:16 * PAGE + 72] == 7)
+
+
+def test_verb_retry_runs_handler_with_bounded_attempts():
+    calls = []
+
+    def handler(fault, attempt):
+        calls.append((fault.vpn, attempt))
+        fault.table.map(fault.space, fault.vpn, 20)
+
+    engine, t = _run_verb("retry", handler=handler)
+    engine.wait_all()
+    assert calls == [(5, 1)]
+    assert engine.stats.retries == 1
+    assert t.walk(AXI, 5) == 20
+    assert engine._records[0].status == "done"
+
+
+def test_verb_retry_exhaustion_aborts():
+    engine, _ = _run_verb("retry", handler=lambda f, n: None,
+                          max_replays=2)
+    with pytest.raises(PageFault):
+        engine.wait_all()
+    assert engine.stats.retries == 2      # max_replays handler round trips
+    assert engine.stats.errors == 3       # 2 retried + 1 exhausting fault
+    assert engine.stats.aborts == 1
+
+
+def test_verb_continue_partial_completion_and_faulted_pages():
+    engine, _ = _run_verb("continue")
+    engine.wait_all()
+    st = engine.stats
+    assert st.errors == 0                 # dropped, not errored
+    assert st.page_faults == 1
+    rec = engine._records[0]
+    assert rec.status == "done"
+    assert rec.faulted_pages == ((AXI.name, 5),)
+    # rows 0 and 2 executed, row 1 dropped
+    assert st.bytes_moved == 128
+
+
+def test_backoff_exponential_with_cap():
+    p = ErrorPolicy(action="replay", max_replays=5, replay_backoff=4,
+                    backoff_cap=9)
+    assert [p.backoff_for(a) for a in range(4)] == [4, 8, 9, 9]
+    assert ErrorPolicy(replay_backoff=0).backoff_for(3) == 0
+    with pytest.raises(ValueError):
+        ErrorPolicy(backoff_cap=0)
+
+
+def test_fault_loop_charges_exponential_backoff():
+    engine, _ = _run_verb("retry", handler=lambda f, n: None,
+                          max_replays=3, backoff=4, cap=1 << 16)
+    with pytest.raises(PageFault):
+        engine.wait_all()
+    # attempts 1..3 charge 4, 8, 16; the exhausting 4th charges nothing
+    assert engine.stats.backoff_cycles == 28
+    assert engine.last_channel_result.backoff_cycles == 28
+
+
+# --------------------------------------------------------------------------
+# Plan cache with translation
+# --------------------------------------------------------------------------
+
+def test_plan_cache_hit_is_byte_identical_cold_vs_replayed():
+    rows = [(256, 20 * PAGE + 64, 3000), (PAGE - 40, 24 * PAGE, 200)]
+    shifted = [(s + 2 * PAGE, d + 3 * PAGE, ln) for s, d, ln in rows]
+
+    def run(plan_cache):
+        t = _identity(_table(), 64)
+        engine = build_engine(_spec(t), plan_cache=plan_cache)
+        rng = np.random.default_rng(3)
+        buf = engine.mem.spaces[AXI]
+        buf[:] = rng.integers(0, 256, size=buf.size, dtype=np.uint8)
+        engine.dispatch_batch(_batch(rows))
+        engine.wait_all()
+        engine.dispatch_batch(_batch(shifted))
+        engine.wait_all()
+        return engine
+
+    cold = run(plan_cache=False)
+    hit = run(plan_cache=64)
+    assert hit.plan_cache.stats.hits >= 1  # page-shifted twin rebinds
+    assert np.array_equal(cold.mem.spaces[AXI], hit.mem.spaces[AXI])
+    assert cold.stats.bursts == hit.stats.bursts
+    assert cold.stats.bytes_moved == hit.stats.bytes_moved
+
+
+def test_verbs_fire_identically_on_plan_cache_hit():
+    """Error-policy verbs on a cache-hit submission behave byte-for-byte
+    like the cold-lower path (the hit rebinds, then re-translates)."""
+    rows = [(256, 20 * PAGE, 64)]
+    faulting = [(256 + PAGE, 40 * PAGE, 64)]   # dst vpn 40+3 unmapped
+
+    def run(plan_cache, action):
+        t = _table(pin=(48, 4))
+        t.map_range(AXI, 0, 0, 32)
+        policy = ErrorPolicy(action=action, max_replays=1)
+        engine = build_engine(_spec(t, policy), plan_cache=plan_cache)
+        rng = np.random.default_rng(5)
+        buf = engine.mem.spaces[AXI]
+        buf[:] = rng.integers(0, 256, size=buf.size, dtype=np.uint8)
+        engine.dispatch_batch(_batch(rows))     # warm (and capture)
+        engine.wait_all()
+        engine.dispatch_batch(_batch(faulting))  # same structure: hit
+        try:
+            engine.wait_all()
+            err = None
+        except TransferError as e:
+            err = e
+        return engine, err
+
+    for action in ("pin", "continue", "abort"):
+        cold, err_c = run(False, action)
+        hit, err_h = run(64, action)
+        if action == "abort":
+            assert err_c is not None and err_h is not None
+            assert (err_c.kind, err_c.vpn) == (err_h.kind, err_h.vpn)
+        else:
+            assert err_c is None and err_h is None
+        assert hit.plan_cache.stats.hits >= 1
+        assert np.array_equal(cold.mem.spaces[AXI], hit.mem.spaces[AXI])
+        assert (cold.stats.pins, cold.stats.continues, cold.stats.aborts,
+                cold.stats.page_faults) == \
+               (hit.stats.pins, hit.stats.continues, hit.stats.aborts,
+                hit.stats.page_faults)
+        if action == "continue":
+            assert cold._records[1].faulted_pages == \
+                hit._records[1].faulted_pages != ()
+
+
+def test_remap_bumps_epoch_and_changes_plan_signature():
+    t = _identity(_table(), 8)
+    stage = TranslateStage(t)
+    sig0 = stage.signature()
+    t.map(AXI, 1, 7)                       # remap: epoch bump
+    assert stage.signature() != sig0
+    t2 = _identity(_table(), 8)
+    t2.map(AXI, 20, 21)                    # fresh map: same signature shape
+    s2 = TranslateStage(t2)
+    assert s2.signature()[-1] == 0         # no epoch bump on growth
+
+
+def test_translate_stage_modulus_folds_into_plan_residues():
+    from repro.core import plan_signature
+    t = _identity(_table(), 8)
+    stage = TranslateStage(t)
+    assert stage.modulus() == PAGE
+    b1 = _batch([(0, 2 * PAGE, 64)])
+    b2 = _batch([(PAGE, 3 * PAGE, 64)])    # page-shifted: same residues
+    b3 = _batch([(8, 2 * PAGE, 64)])       # different residue
+    assert plan_signature(b1, 8, pipeline=[stage]) == \
+        plan_signature(b2, 8, pipeline=[stage])
+    assert plan_signature(b1, 8, pipeline=[stage]) != \
+        plan_signature(b3, 8, pipeline=[stage])
+
+
+# --------------------------------------------------------------------------
+# Sanitizer + planaudit codes
+# --------------------------------------------------------------------------
+
+def test_h007_alias_audit_flags_translated_overlap():
+    from repro.sanitize import check_engine
+    t = _table()
+    t.map(AXI, 0, 2)
+    t.map(AXI, 1, 2)                       # alias: two vpns -> ppn 2
+    t.map(AXI, 4, 4)
+    t.map(AXI, 5, 5)
+    engine = build_engine(_spec(t), plan_cache=False)
+    # one batch (rows mutually unordered), disjoint on the virtual
+    # plane, overlapping on the physical plane: both writes land in ppn 2
+    engine.dispatch_batch(_batch([(4 * PAGE, 0, 64),
+                                  (5 * PAGE, PAGE, 64)]))
+    report = check_engine(engine)
+    assert report.has("H007")
+    assert not report.clean
+    engine.wait_all()                      # still executes
+
+
+def test_h007_not_raised_for_virtual_plane_hazards():
+    from repro.sanitize import check_engine
+    t = _identity(_table(), 8)
+    engine = build_engine(_spec(t), plan_cache=False)
+    # a genuine WAW on the *virtual* plane: not an aliasing artifact
+    engine.dispatch_batch(_batch([(0, 4 * PAGE, 64),
+                                  (PAGE, 4 * PAGE, 64)]))
+    report = check_engine(engine)
+    assert report.has("H002") or report.has("H003")
+    assert not report.has("H007")
+    engine.wait_all()
+
+
+def test_p003_stale_tlb_flagged_by_planaudit():
+    from repro.sanitize import audit_plan, audit_replay
+    t = _identity(_table(), 16)
+    stage = TranslateStage(t, shootdown=False)   # deliberately unhooked
+    spec = EngineSpec(name="p003", midend=(stage,),
+                      backend=BackendSpec(protocols=(AXI,), bus_width=8),
+                      mem_spaces=((AXI, 64 * PAGE),))
+    engine = build_engine(spec, plan_cache=64)
+    engine.dispatch_batch(_batch([(0, 8 * PAGE, 64)]))
+    engine.wait_all()                      # warm TLB + capture plan
+    t.map(AXI, 0, 9)                       # remap; TLB not shot down
+    assert stage.audit_translations() != []
+    # the epoch bump changed the plan signature, so a resubmission
+    # misses the cache (sound by construction) ...
+    assert audit_replay(engine.plan_cache, _batch([(0, 8 * PAGE, 64)]),
+                        bus_width=8, pipeline=engine.pipeline) is None
+    # ... and a direct audit of the captured plan names the stale entry
+    plan = next(iter(engine.plan_cache._plans.values()))
+    report = audit_plan(plan, _batch([(0, 8 * PAGE, 64)]), bus_width=8,
+                        pipeline=engine.pipeline)
+    assert report.has("P003")
+
+
+def test_p003_clean_when_shootdown_wired():
+    from repro.sanitize import audit_replay
+    t = _identity(_table(), 16)
+    stage = TranslateStage(t)              # shootdown=True default
+    spec = _spec(t)
+    spec = EngineSpec(name="p003b", midend=(stage,),
+                      backend=spec.backend, mem_spaces=spec.mem_spaces)
+    engine = build_engine(spec, plan_cache=64)
+    engine.dispatch_batch(_batch([(0, 8 * PAGE, 64)]))
+    engine.wait_all()
+    t.map(AXI, 0, 9)                       # remap shoots the TLB down
+    assert stage.audit_translations() == []
+
+
+# --------------------------------------------------------------------------
+# Irregular-transfer builders
+# --------------------------------------------------------------------------
+
+def test_sg_list_roundtrip_and_gather():
+    buf = np.zeros(1024, dtype=np.uint8)
+    entries = [(0x1000, 100), (0x5000, 8), (0x2345, 256)]
+    head = write_sg_list(buf, [0, 64, 128], entries)
+    assert read_sg_list(buf, head) == entries
+    batch = sg_gather_batch(buf, head, dst_addr=0x9000)
+    assert len(batch) == 3
+    assert np.array_equal(batch.src_addr, [0x1000, 0x5000, 0x2345])
+    # dense destination: cumulative offsets
+    assert np.array_equal(batch.dst_addr, [0x9000, 0x9064, 0x906c])
+    assert np.array_equal(batch.length, [100, 8, 256])
+
+
+def test_sg_list_cycle_guard():
+    buf = np.zeros(256, dtype=np.uint8)
+    head = write_sg_list(buf, [0, 64], [(0, 8), (8, 8)])
+    # corrupt the tail to point back at the head
+    import struct
+    struct.pack_into("<q", buf, 64 + 16, 0)
+    with pytest.raises(ValueError):
+        read_sg_list(buf, head)
+
+
+def test_expert_gather_matches_moe_routing():
+    rng = np.random.default_rng(11)
+    t_tokens, e, cap, d = 16, 4, 3, 64
+    token_va = 0x4000 + np.arange(t_tokens, dtype=np.int64) * d
+    idx = rng.integers(0, e, size=t_tokens)
+    batch = expert_gather_batch(token_va, idx, n_experts=e, capacity=cap,
+                                d_bytes=d, expert_buf_va=0x20000)
+    # mirror of models.moe: stable sort, rank-within-expert, capacity drop
+    order = np.argsort(idx, kind="stable")
+    e_s = idx[order]
+    first = np.searchsorted(e_s, e_s, side="left")
+    rank = np.arange(t_tokens) - first
+    keep = rank < cap
+    assert len(batch) == int(keep.sum())
+    assert np.array_equal(np.sort(batch.src_addr),
+                          np.sort(token_va[order][keep]))
+    slots = (batch.dst_addr - 0x20000) // d
+    assert np.array_equal(np.sort(slots),
+                          np.sort(e_s[keep] * cap + rank[keep]))
+    # dst slots are unique: the gather is hazard-free by construction
+    assert len(np.unique(batch.dst_addr)) == len(batch)
+
+
+def test_expert_gather_end_to_end_through_translation():
+    t = _table()
+    rng = np.random.default_rng(13)
+    perm = rng.permutation(32)
+    for v in range(32):
+        t.map(AXI, v, int(perm[v]))
+    engine = build_engine(_spec(t), plan_cache=False)
+    buf = engine.mem.spaces[AXI]
+    buf[:] = rng.integers(0, 256, size=buf.size, dtype=np.uint8)
+    token_va = np.arange(8, dtype=np.int64) * 64
+    idx = rng.integers(0, 2, size=8)
+    batch = expert_gather_batch(token_va, idx, n_experts=2, capacity=8,
+                                d_bytes=64, expert_buf_va=20 * PAGE)
+    # scalar oracle on a copy: translate each row by hand, then execute
+    mem2 = MemoryMap.create({AXI: buf.size})
+    mem2.spaces[AXI][:] = buf
+
+    def xl(a):
+        return int(perm[a // PAGE]) * PAGE + a % PAGE
+    oracle = DescriptorBatch.from_arrays(
+        src_addr=np.asarray([xl(int(a)) for a in batch.src_addr]),
+        dst_addr=np.asarray([xl(int(a)) for a in batch.dst_addr]),
+        length=batch.length.copy())
+    execute(legalize_batch(oracle, bus_width=8).to_transfers(), mem2,
+            bus_width=8)
+    engine.dispatch_batch(batch)
+    engine.wait_all()
+    assert np.array_equal(buf, mem2.spaces[AXI])
+
+
+def test_moe_model_wrapper_delegates():
+    pytest.importorskip("jax")
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import moe_expert_gather
+    mc = MoEConfig(n_experts=4, top_k=1, d_ff_expert=64)
+    token_va = np.arange(12, dtype=np.int64) * 128
+    idx = np.zeros(12, dtype=np.int64)
+    batch = moe_expert_gather(token_va, idx, mc, d_bytes=128,
+                              expert_buf_va=0x10000, capacity=4)
+    assert len(batch) == 4                # capacity-dropped to 4
+    assert np.array_equal(batch.src_addr, token_va[:4])
