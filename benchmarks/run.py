@@ -46,6 +46,7 @@ SUITES = [
     ("channel_sweep", "multi-channel aggregate bandwidth (§4 concurrency)"),
     ("plan_replay", "compile-once / replay-many paged-KV decode"),
     ("vm_translate", "virtual-memory translation overhead (TLB-warm)"),
+    ("serve_bench", "continuous batching vs padded batch (closed loop)"),
     ("collective_sweep", "multi-engine collective fabric scaling"),
     ("kernel_bench", "kernels + TPU rooflines"),
     ("roofline", "dry-run roofline table"),

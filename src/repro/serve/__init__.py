@@ -1,14 +1,18 @@
 """Serving: batched prefill/decode engine + the paged-KV DMA plane.
 
 The step-function engine (`ServeEngine`) needs the model / sharding
-stack; the paged-KV descriptor plane (`kvcache`) only needs `repro.core`
-and jax — so the heavy imports are optional and the DMA path stays
+stack; the paged-KV descriptor plane (`kvcache`) and the
+continuous-batching scheduler (`sched`) only need `repro.core` and
+numpy/jax — so the heavy imports are optional and the DMA path stays
 usable in core-only builds.
 """
 
 from .kvcache import (KVLayout, PagedKVDMA, PagePool, append_descriptors,
                       append_token, gather_descriptors, gather_kv,
-                      init_paged_kv, make_page_tables)
+                      init_paged_kv, make_page_tables,
+                      span_append_descriptors, swap_descriptors)
+from .sched import (BlockAllocator, HashLM, ReqState, Scheduler,
+                    ServeFrontDoor, ServeRequest, StepLM, oracle_generate)
 
 try:  # model/sharding stack — optional in core-only builds
     from .serve_step import make_prefill_step, make_decode_step
@@ -20,6 +24,8 @@ except ModuleNotFoundError:  # pragma: no cover - dist-less build
 __all__ = [
     "KVLayout", "PagedKVDMA", "PagePool", "append_descriptors",
     "append_token", "gather_descriptors", "gather_kv", "init_paged_kv",
-    "make_page_tables",
+    "make_page_tables", "span_append_descriptors", "swap_descriptors",
+    "BlockAllocator", "HashLM", "ReqState", "Scheduler", "ServeFrontDoor",
+    "ServeRequest", "StepLM", "oracle_generate",
     "make_prefill_step", "make_decode_step", "ServeEngine", "Request",
 ]

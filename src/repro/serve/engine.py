@@ -7,7 +7,7 @@ functions are jit'd with the decode shardings from `dist.sharding`.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,13 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
+    stop_tokens: Tuple[int, ...] = ()
     output: List[int] = field(default_factory=list)
+
+    @property
+    def finished(self) -> bool:
+        return len(self.output) >= self.max_new_tokens or \
+            bool(self.output and self.output[-1] in self.stop_tokens)
 
 
 class ServeEngine:
@@ -55,19 +61,32 @@ class ServeEngine:
             r.output.append(int(cur[i]))
 
         for _ in range(max_new - 1):
+            if all(r.finished for r in requests):
+                break  # every request hit max_new or a stop token
             logits, caches = self._decode(
                 self.params, caches, cur[:, None], jnp.int32(pos))
             cur = self._sample(logits, requests)
             pos += 1
             for i, r in enumerate(requests):
-                if len(r.output) < r.max_new_tokens:
+                if not r.finished:
                     r.output.append(int(cur[i]))
         return requests
 
     def _sample(self, logits, requests) -> jax.Array:
+        """Per-request sampling over the batch: greedy rows are exact
+        ``argmax`` (never touched by a neighbour's temperature), each
+        hot row is drawn at *its own* temperature with its own key."""
         temps = [r.temperature for r in requests]
+        greedy = greedy_sample(logits)
         if all(t <= 0 for t in temps):
-            return greedy_sample(logits)
+            return greedy
         self.key, sub = jax.random.split(self.key)
-        return temperature_sample(sub, logits,
-                                  max(max(temps), 1e-4))
+        rows = []
+        for i, t in enumerate(temps):
+            if t <= 0:
+                rows.append(greedy[i])
+            else:
+                rows.append(temperature_sample(
+                    jax.random.fold_in(sub, i), logits[i:i + 1],
+                    max(t, 1e-4))[0])
+        return jnp.stack(rows)

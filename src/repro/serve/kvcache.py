@@ -208,6 +208,73 @@ def append_descriptors(layout: KVLayout, page_table: np.ndarray, pos: int,
         src_protocol=src_protocol, dst_protocol=dst_protocol)
 
 
+def span_append_descriptors(layout: KVLayout, blocks, start: int, end: int,
+                            stage_k: int = 0, stage_v: int = 0,
+                            pool_base: int = 0,
+                            src_protocol: Protocol = Protocol.VMEM,
+                            dst_protocol: Protocol = Protocol.HBM
+                            ) -> DescriptorBatch:
+    """Multi-row append for ONE sequence as a `DescriptorBatch`: scatter
+    the token rows of positions ``[start, end)`` from contiguous staging
+    regions (K rows at ``stage_k``, V rows at ``stage_v``, row ``i`` of
+    the span at ``+ i*row_bytes``) into the sequence's pages.
+
+    This is the prefill-chunk / decode-append granule of the continuous
+    batching scheduler (`serve.sched`): one doorbell covers a whole
+    prompt chunk (or a single decode row, ``end == start + 1``), K and V
+    in one batch."""
+    pos = np.arange(start, end, dtype=np.int64)
+    phys = np.asarray(blocks, dtype=np.int64)[pos // layout.page_size]
+    dst = (phys * layout.page_bytes
+           + (pos % layout.page_size) * layout.row_bytes)
+    src = np.arange(end - start, dtype=np.int64) * layout.row_bytes
+    return concat_batches([
+        DescriptorBatch.from_arrays(
+            src_addr=base + src, dst_addr=pool + dst,
+            length=np.full(src.shape[0], layout.row_bytes, dtype=np.int64),
+            src_protocol=src_protocol, dst_protocol=dst_protocol)
+        for base, pool in ((stage_k, pool_base),
+                           (stage_v, pool_base + layout.pool_bytes))])
+
+
+def swap_descriptors(layout: KVLayout, blocks, slots, direction: str,
+                     pool_base: int = 0, host_base: int = 0,
+                     host_protocol: Protocol = Protocol.HOST,
+                     pool_protocol: Protocol = Protocol.HBM
+                     ) -> DescriptorBatch:
+    """Preemption swap traffic as a `DescriptorBatch`: page-granular
+    moves between the HBM pools and per-block HOST swap slots.
+
+    ``blocks[i]`` pairs with ``slots[i]``; each HOST slot is
+    ``2 * page_bytes`` (the block's K page then its V page).
+    ``direction="out"`` evicts (HBM→HOST), ``"in"`` restores (HOST→HBM —
+    typically into freshly allocated blocks, so a resumed request's pages
+    land wherever the allocator had room).  Swap streams ride the same
+    engine channels as decode gathers, so eviction traffic contends with
+    serving traffic in `simulate_channels` — the scheduler's swap cost is
+    the timing model's, not a constant."""
+    blocks = np.asarray(blocks, dtype=np.int64)
+    slots = np.asarray(slots, dtype=np.int64)
+    if blocks.shape != slots.shape:
+        raise ValueError(f"swap needs one slot per block: "
+                         f"{blocks.shape} vs {slots.shape}")
+    pb = layout.page_bytes
+    pool = pool_base + np.concatenate([blocks * pb,
+                                       layout.pool_bytes + blocks * pb])
+    host = host_base + np.concatenate([slots * 2 * pb,
+                                       slots * 2 * pb + pb])
+    length = np.full(pool.shape[0], pb, dtype=np.int64)
+    if direction == "out":
+        return DescriptorBatch.from_arrays(
+            src_addr=pool, dst_addr=host, length=length,
+            src_protocol=pool_protocol, dst_protocol=host_protocol)
+    if direction == "in":
+        return DescriptorBatch.from_arrays(
+            src_addr=host, dst_addr=pool, length=length,
+            src_protocol=host_protocol, dst_protocol=pool_protocol)
+    raise ValueError(f"direction must be 'out' or 'in', got {direction!r}")
+
+
 class PagedKVDMA:
     """A paged KV cache whose append/gather are *engine transfers*.
 

@@ -1,0 +1,31 @@
+"""Continuous-batching serve scheduler (the vLLM-class front door).
+
+* `alloc`  — `BlockAllocator`: paged-KV free list, refcounts, HOST swap
+  slots, admission watermark;
+* `sched`  — `Scheduler` + `ServeRequest`: FCFS admission, LIFO
+  preemption on exhaustion, chunked prefill, completion-driven state
+  transitions;
+* `model`  — the model byte-contract: `HashLM` (deterministic numpy
+  reference) and `oracle_generate` (the sequential one-request oracle);
+* `front`  — `ServeFrontDoor`: turns step plans into descriptor traffic
+  on one `IDMAEngine`, interrupt-driven completion;
+* `steplm` — `StepLM`: the jax prefill/decode step functions bound to
+  the dynamic batch (optional — needs the model stack).
+"""
+
+from .alloc import AllocStats, BlockAllocator
+from .front import ServeFrontDoor, ServeMetrics, StepMetrics, serve_spec
+from .model import HashLM, oracle_generate
+from .sched import (ReqState, SchedStats, Scheduler, ServeRequest,
+                    StepPlan)
+
+try:  # jax model-stack binding — optional in core-only builds
+    from .steplm import StepLM
+except ModuleNotFoundError:  # pragma: no cover - dist-less build
+    StepLM = None
+
+__all__ = [
+    "AllocStats", "BlockAllocator", "HashLM", "ReqState", "SchedStats",
+    "Scheduler", "ServeFrontDoor", "ServeMetrics", "ServeRequest",
+    "StepLM", "StepMetrics", "StepPlan", "oracle_generate", "serve_spec",
+]

@@ -17,14 +17,17 @@ from .collective import (check_collective_program,
                          shrink_collective_program)
 from .generator import FAMILIES, generate_program, generate_racy_program
 from .harness import check_program
+from .serve import (check_serve_program, generate_serve_program,
+                    shrink_serve_program)
 from .shrink import shrink_program
 from .vm import (check_vm_program, generate_vm_program, shrink_vm_program)
 
 #: the full family rotation: every engine family from the generator plus
 #: the multi-engine collective-fabric family, the deliberately-racy
-#: sanitizer-validation family and the virtual-memory translation family
-#: (seed % len picks one — vm lands on seed % 8 == 7)
-ALL_FAMILIES = FAMILIES + ("collective", "racy", "vm")
+#: sanitizer-validation family, the virtual-memory translation family
+#: and the continuous-batching serve family (seed % len picks one —
+#: vm lands on seed % 9 == 7, serve on seed % 9 == 8)
+ALL_FAMILIES = FAMILIES + ("collective", "racy", "vm", "serve")
 
 
 def _run_one(seed, family, differential=False, storm=False):
@@ -40,6 +43,9 @@ def _run_one(seed, family, differential=False, storm=False):
     """
     rotation = (FAMILIES + ("racy",)) if differential else ALL_FAMILIES
     fam = family or rotation[seed % len(rotation)]
+    if fam == "serve":
+        program = generate_serve_program(seed)
+        return program, check_serve_program(program), shrink_serve_program
     if fam == "vm":
         program = generate_vm_program(seed, storm=storm)
         return program, check_vm_program(program), shrink_vm_program
@@ -72,7 +78,7 @@ def run_seeds(seeds, family=None, do_shrink=True, fail_fast=False,
               log=print, differential=False, storm=False):
     """Exercise every seed; returns (stats dict, list of divergences)."""
     totals = {"programs": 0, "submissions": 0, "rows": 0, "faults": 0,
-              "collectives": 0}
+              "collectives": 0, "requests": 0}
     divergences = []
     for seed in seeds:
         program, d, shrinker = _run_one(seed, family,
@@ -80,7 +86,9 @@ def run_seeds(seeds, family=None, do_shrink=True, fail_fast=False,
                                         storm=storm)
         totals["programs"] += 1
         totals["rows"] += program.num_rows
-        if hasattr(program, "submissions"):
+        if getattr(program, "family", None) == "serve":
+            totals["requests"] += len(program.requests)
+        elif hasattr(program, "submissions"):
             totals["submissions"] += len(program.submissions)
             totals["faults"] += len(program.fault_sites)
         else:
@@ -149,7 +157,8 @@ def main(argv=None) -> int:
         storm=args.storm)
     print(f"{totals['programs']} programs "
           f"({totals['submissions']} submissions, {totals['rows']} rows, "
-          f"{totals['faults']} fault sites): "
+          f"{totals['faults']} fault sites, "
+          f"{totals['requests']} serve requests): "
           f"{len(divergences)} divergence(s)")
     return 1 if divergences else 0
 

@@ -1,4 +1,5 @@
-"""Public-API snapshot: ``repro.core.__all__`` vs the checked-in manifest.
+"""Public-API snapshot: ``repro.core.__all__`` plus the serving layer's
+``repro.serve.__all__`` (as ``serve.<name>``) vs the checked-in manifest.
 
 The composable instantiation API (`core.spec`) *is* the product — this
 test makes every addition/removal to the public surface an explicit,
@@ -6,8 +7,9 @@ reviewable diff of ``tests/api_surface.txt`` instead of an accident.
 Regenerate the manifest after an intentional change with::
 
     PYTHONPATH=src python -c "
-    import repro.core as c
-    for n in sorted(c.__all__): print(n)" > tests/api_surface.txt
+    import repro.core as c, repro.serve as s
+    names = list(c.__all__) + ['serve.' + n for n in s.__all__]
+    for n in sorted(names): print(n)" > tests/api_surface.txt
 
 Runs in the CI docs job (which installs requirements.txt — importing
 repro.core pulls in jax via core.instream).
@@ -18,15 +20,21 @@ import pathlib
 MANIFEST = pathlib.Path(__file__).with_name("api_surface.txt")
 
 
-def test_public_api_matches_manifest():
+def _current_surface():
     import repro.core as core
+    import repro.serve as serve
 
+    return sorted(list(core.__all__)
+                  + [f"serve.{n}" for n in serve.__all__])
+
+
+def test_public_api_matches_manifest():
     want = [ln for ln in MANIFEST.read_text().splitlines() if ln.strip()]
-    got = sorted(core.__all__)
+    got = _current_surface()
     added = sorted(set(got) - set(want))
     removed = sorted(set(want) - set(got))
     assert got == sorted(want), (
-        f"repro.core public API drifted from tests/api_surface.txt "
+        f"public API drifted from tests/api_surface.txt "
         f"(added: {added or '-'}, removed: {removed or '-'}). If the "
         f"change is intentional, regenerate the manifest (see module "
         f"docstring).")
@@ -34,9 +42,15 @@ def test_public_api_matches_manifest():
 
 def test_manifest_names_resolve():
     import repro.core as core
+    import repro.serve as serve
 
     for name in (ln.strip() for ln in MANIFEST.read_text().splitlines()):
-        if name:
+        if not name:
+            continue
+        if name.startswith("serve."):
+            assert hasattr(serve, name[len("serve."):]), \
+                f"manifest names missing {name!r}"
+        else:
             assert hasattr(core, name), f"manifest names missing {name!r}"
 
 

@@ -13,6 +13,9 @@ import repro.core.backend as backend
 from repro.verify import (FAMILIES, check_program, generate_program,
                           shrink_program)
 from repro.verify.__main__ import run_seeds
+from repro.verify.serve import (check_serve_program,
+                                generate_serve_program,
+                                shrink_serve_program)
 
 
 class TestGenerator:
@@ -86,3 +89,36 @@ class TestMutationCheck:
         # the same seed passes once the mutation is gone: the catch in
         # the planted-bug tests is the harness, not a flaky seed
         assert check_program(generate_program(1)) is None
+
+
+class TestServeFamily:
+    def test_same_seed_same_program(self):
+        for seed in (0, 8, 17):
+            a = generate_serve_program(seed)
+            assert a.describe() == generate_serve_program(seed).describe()
+
+    def test_clean_seeds_pass(self):
+        for seed in range(4):
+            assert check_serve_program(generate_serve_program(seed)) \
+                is None
+
+    def test_planted_bug_caught_and_shrunk(self, monkeypatch):
+        """The same data-plane mutation the engine families use: corrupt
+        one destination byte per grouped copy.  The serve family must
+        catch it as a token divergence against the sequential oracle and
+        shrink the trace while keeping the kind."""
+        orig = backend._exec_copy_group
+
+        def corrupt(src_buf, dst_buf, sa, da, lens, instream, bins=None):
+            orig(src_buf, dst_buf, sa, da, lens, instream, bins)
+            if len(da):
+                dst_buf[int(da[0])] ^= 0xFF
+
+        monkeypatch.setattr(backend, "_exec_copy_group", corrupt)
+        prog = generate_serve_program(0)
+        d = check_serve_program(prog)
+        assert d is not None and d.kind == "serve-tokens"
+        small, small_d = shrink_serve_program(prog, d, budget=40)
+        assert small_d.kind == d.kind
+        assert len(small.requests) <= len(prog.requests)
+        assert small.num_rows <= prog.num_rows
